@@ -1,0 +1,40 @@
+"""Paper Fig. 8 + headline claims — per-dataset computation/communication
+latency breakdown (LiveJournal / Collab / Cora / Citeseer) for centralized
+vs decentralized IMA-GNN, and the two published averages:
+  * centralized communication ~790x faster than decentralized,
+  * decentralized computation ~1400x faster than centralized."""
+from __future__ import annotations
+
+from repro.core import costmodel
+from repro.core.graph import TABLE2_DATASETS
+
+
+def rows():
+    out = []
+    for name, stats in TABLE2_DATASETS.items():
+        c = costmodel.predict("centralized", stats)
+        d = costmodel.predict("decentralized", stats)
+        out.append((name, c, d))
+    return out
+
+
+def main(csv: bool = False) -> int:
+    print(f"{'dataset':14s} {'cent.comp':>11s} {'cent.comm':>11s} "
+          f"{'dec.comp':>11s} {'dec.comm':>11s} {'comp x':>9s} {'comm x':>9s}")
+    for name, c, d in rows():
+        print(f"{name:14s} {c.t_compute:11.4e} {c.t_communicate:11.4e} "
+              f"{d.t_compute:11.4e} {d.t_communicate:11.4e} "
+              f"{c.t_compute / d.t_compute:9.1f} "
+              f"{d.t_communicate / c.t_communicate:9.1f}")
+    comp_x, comm_x = costmodel.headline_averages()
+    ok_comp = 1400 * 0.85 <= comp_x <= 1400 * 1.15
+    ok_comm = 790 * 0.85 <= comm_x <= 790 * 1.15
+    print(f"\n4-dataset averages: decentralized computes {comp_x:.0f}x faster "
+          f"(paper ~1400x) {'OK' if ok_comp else 'MISMATCH'}")
+    print(f"                    centralized communicates {comm_x:.0f}x faster "
+          f"(paper ~790x) {'OK' if ok_comm else 'MISMATCH'}")
+    return int(not ok_comp) + int(not ok_comm)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,96 @@
+"""Parse collective ops + traffic estimates out of compiled SPMD HLO text.
+
+After SPMD partitioning the module is the per-device program, so result
+shapes are per-device. Per-device link traffic is estimated with the ring
+model:
+  all-reduce       2 * bytes * (n-1)/n      (bytes = per-shard payload)
+  all-gather       bytes_result * (n-1)/n   (result = gathered full)
+  reduce-scatter   bytes_result * (n-1)     (operand = n * result)
+  all-to-all       bytes_result * (n-1)/n
+  collective-permute  bytes_result
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def collective_stats(hlo_text: str, default_group: int = 16) -> dict:
+    """Returns {op: {count, result_bytes, traffic_bytes}} + 'total'."""
+    stats = defaultdict(lambda: {"count": 0, "result_bytes": 0,
+                                 "traffic_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        for op in _OPS:
+            # match '<op>(' or '<op>-start(' but never '-done('
+            idx = line.find(f" {op}")
+            if idx < 0:
+                continue
+            after = line[idx + 1 + len(op):]
+            if after.startswith("-done") or not (
+                    after.startswith("(") or after.startswith("-start(")):
+                continue
+            eq = line.find("=")
+            if eq < 0:
+                continue
+            rb = _shape_bytes(line[eq:idx])
+            n = max(_group_size(line, default_group), 2)
+            if op == "all-reduce":
+                traffic = 2.0 * rb * (n - 1) / n
+            elif op == "reduce-scatter":
+                traffic = float(rb) * (n - 1)
+            elif op == "collective-permute":
+                traffic = float(rb)
+            else:
+                traffic = float(rb) * (n - 1) / n
+            s = stats[op]
+            s["count"] += 1
+            s["result_bytes"] += rb
+            s["traffic_bytes"] += traffic
+            break
+    total = {"count": sum(s["count"] for s in stats.values()),
+             "result_bytes": sum(s["result_bytes"] for s in stats.values()),
+             "traffic_bytes": sum(s["traffic_bytes"] for s in stats.values())}
+    out = dict(stats)
+    out["total"] = total
+    return out
+
+
+def scan_trip_counts(hlo_text: str) -> list:
+    """Trip counts of while loops (layer scans) — collective/flop totals for
+    ops inside a scan body must be multiplied by these when the body is
+    invoked per iteration."""
+    return [int(m) for m in re.findall(
+        r"trip_count=(\d+)", hlo_text)]

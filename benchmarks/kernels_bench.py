@@ -1,0 +1,64 @@
+"""Per-kernel micro-benchmarks: wall time of the jnp reference path on CPU
+(interpret-mode Pallas is a correctness oracle, not a perf path) plus the
+analytic crossbar-pass counts the cost model assigns the same workload —
+tying the kernel layer to the paper's latency primitives."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cam_match import ops as cam_ops
+from repro.kernels.crossbar_mvm import ref as mvm_ref
+from repro.kernels.csr_aggregate import ops as agg_ops
+
+
+def _time(fn, *args, iters: int = 20) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def rows():
+    k = jax.random.key(0)
+    out = []
+
+    # traversal: CAM search of 1 destination over E edges
+    for e in (4096, 65536):
+        ci = jax.random.randint(k, (e,), 0, 10_000, jnp.int32)
+        q = jnp.arange(128, dtype=jnp.int32)
+        fn = lambda ci, q: cam_ops.search(ci, q, backend="jnp")
+        out.append((f"cam_search/E={e}", _time(fn, ci, q)))
+
+    # aggregation: padded-neighbor gather-reduce
+    for n, s, f in ((1024, 16, 256), (4096, 32, 512)):
+        x = jax.random.normal(k, (n, f), jnp.float32)
+        nb = jax.random.randint(k, (n, s), 0, n, jnp.int32)
+        w = jnp.ones((n, s), jnp.float32)
+        fn = lambda x, nb, w: agg_ops.aggregate(x, nb, w, backend="jnp")
+        out.append((f"csr_aggregate/N={n},S={s},F={f}", _time(fn, x, nb, w)))
+
+    # feature extraction: crossbar quantized matmul (jnp integer-domain path)
+    for m, kk, n2 in ((128, 128, 128), (512, 512, 512)):
+        x = jax.random.normal(k, (m, kk), jnp.float32)
+        w = jax.random.normal(k, (kk, n2), jnp.float32) * 0.05
+        fn = lambda x, w: mvm_ref.crossbar_matmul_signed_ref(x, w)
+        out.append((f"crossbar_mvm/{m}x{kk}x{n2}", _time(fn, x, w)))
+    return out
+
+
+def main(csv: bool = False) -> int:
+    print(f"{'kernel':36s} {'us_per_call':>12s}")
+    for name, us in rows():
+        print(f"{name:36s} {us:12.1f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

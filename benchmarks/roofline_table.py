@@ -1,0 +1,58 @@
+"""Render the roofline table from results/dryrun.jsonl (§Roofline).
+
+Reads every record the dry-run sweep appended and prints, per
+(arch x shape x mesh): the three roofline terms, the dominant one,
+MODEL_FLOPS/HLO_FLOPs, and per-device live bytes."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path: str = "results/dryrun.jsonl") -> list:
+    recs, seen = [], {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+            seen[key] = r                      # last record wins
+    return list(seen.values())
+
+
+def main(csv: bool = False, path: str = "results/dryrun.jsonl") -> int:
+    recs = load(path)
+    if not recs:
+        print("no dry-run records found — run "
+              "`python -m repro.launch.dryrun --all --out "
+              "results/dryrun.jsonl` first")
+        return 1
+    recs.sort(key=lambda r: (r.get("arch", ""), r.get("shape", ""),
+                             r.get("mesh", "")))
+    print(f"{'arch':18s} {'shape':12s} {'mesh':8s} {'comp_ms':>9s} "
+          f"{'mem_ms':>9s} {'coll_ms':>9s} {'dominant':>10s} {'useful':>7s} "
+          f"{'GiB/dev':>8s}")
+    n_fail = 0
+    for r in recs:
+        a, s, m = r.get("arch", "?"), r.get("shape", "?"), r.get("mesh", "?")
+        if r.get("skipped"):
+            print(f"{a:18s} {s:12s} {m:8s} {'skip: ' + r['reason'][:58]}")
+            continue
+        if not r.get("ok"):
+            n_fail += 1
+            print(f"{a:18s} {s:12s} {m:8s} FAILED: {r.get('error','')[:58]}")
+            continue
+        t = r["roofline"]
+        print(f"{a:18s} {s:12s} {m:8s} {t['compute_s']*1e3:9.2f} "
+              f"{t['memory_s']*1e3:9.2f} {t['collective_s']*1e3:9.2f} "
+              f"{t['dominant']:>10s} {t['useful_ratio']:7.2f} "
+              f"{r['memory']['live_bytes']/2**30:8.2f}")
+    return n_fail
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

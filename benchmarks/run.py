@@ -1,0 +1,41 @@
+"""Benchmark runner — one module per paper table/figure.
+
+  table1_taxi     Table 1 (taxi case study latency/power, both settings)
+  fig8_datasets   Fig. 8 breakdown + the ~790x / ~1400x headline averages
+  semi_sweep      beyond-paper semi-decentralized cluster sweep (paper §5)
+  kernels_bench   kernel micro-benchmarks
+  roofline_table  §Roofline render of results/dryrun.jsonl (if present)
+
+``python -m benchmarks.run`` runs everything and exits non-zero on any
+paper-validation mismatch."""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import (fig8_datasets, kernels_bench, roofline_table,
+                        semi_sweep, table1_taxi)
+
+
+def main() -> None:
+    failures = 0
+    for name, mod in (("table1_taxi", table1_taxi),
+                      ("fig8_datasets", fig8_datasets),
+                      ("semi_sweep", semi_sweep),
+                      ("kernels_bench", kernels_bench)):
+        print(f"\n===== {name} =====")
+        failures += mod.main()
+    import os
+    # roofline tables are informational here; a missing dry-run file is not
+    # a benchmark failure (the sweep is a separate, long-running step)
+    print("\n===== roofline_table (paper-faithful baseline) =====")
+    roofline_table.main()
+    if os.path.exists("results/dryrun_opt.jsonl"):
+        print("\n===== roofline_table (optimized — EXPERIMENTS.md §Perf) ====")
+        roofline_table.main(path="results/dryrun_opt.jsonl")
+    if failures:
+        sys.exit(f"{failures} benchmark validations failed")
+    print("\nall benchmark validations passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Beyond-paper: the semi-decentralized design guideline, made executable.
+
+The paper's conclusion calls for a hybrid setting balancing decentralized
+compute with centralized communication. We sweep the cluster count for the
+semi-decentralized planner over all Table-2 datasets + the taxi graph and
+report where T_net is minimized — the design rule ``pick_setting`` applies
+at serve time."""
+from __future__ import annotations
+
+from repro.core import costmodel
+from repro.core.graph import TABLE2_DATASETS, TAXI_STATS
+
+CLUSTERS = (1, 4, 16, 64, 256, 1024)
+
+
+def rows():
+    out = []
+    datasets = dict(TABLE2_DATASETS, taxi=TAXI_STATS)
+    for name, stats in datasets.items():
+        for k in CLUSTERS:
+            m = costmodel.predict("semi", stats, n_clusters=k)
+            out.append((name, k, m.t_compute, m.t_communicate, m.t_net))
+    return out
+
+
+def main(csv: bool = False) -> int:
+    print(f"{'dataset':14s} {'clusters':>8s} {'T_comp':>11s} {'T_comm':>11s} "
+          f"{'T_net':>11s}")
+    best = {}
+    for name, k, tc, tm, tn in rows():
+        print(f"{name:14s} {k:8d} {tc:11.4e} {tm:11.4e} {tn:11.4e}")
+        if name not in best or tn < best[name][1]:
+            best[name] = (k, tn)
+    print("\nbest setting per dataset (guideline):")
+    datasets = dict(TABLE2_DATASETS, taxi=TAXI_STATS)
+    for name, stats in datasets.items():
+        choice, metrics = costmodel.pick_setting(stats,
+                                                 n_clusters=best[name][0])
+        cent = metrics["centralized"].t_net
+        dec = metrics["decentralized"].t_net
+        semi = metrics["semi"].t_net
+        print(f"  {name:14s} -> {choice:14s} (cent {cent:.3e}s, "
+              f"dec {dec:.3e}s, semi@{best[name][0]} {semi:.3e}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

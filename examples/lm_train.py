@@ -1,0 +1,88 @@
+"""End-to-end LM training driver: ~100M-param model, few hundred steps.
+
+Uses the production train loop (sharding rules, checkpointing, deterministic
+resume) on a ~100M-parameter InternLM2-family config. Demonstrates the full
+fault-tolerance path: train, kill (simulated fault), resume from the atomic
+checkpoint, verify the loss curve continues.
+
+  PYTHONPATH=src python examples/lm_train.py --steps 200
+"""
+import argparse
+import dataclasses
+import shutil
+import tempfile
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.train import TrainConfig, train
+from repro.models.config import ModelConfig
+
+
+def lm_100m() -> ModelConfig:
+    """~100M-param GQA decoder (internlm2 family, scaled down)."""
+    base = get_config("internlm2-1.8b")
+    return dataclasses.replace(
+        base, name="internlm2-100m", n_layers=8, d_model=512, n_heads=8,
+        n_kv_heads=4, d_ff=2048, vocab=8192)
+
+
+class _Fault(Exception):
+    pass
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--fault-at", type=int, default=0,
+                    help="simulate a node failure at this step (0 = off)")
+    args = ap.parse_args()
+
+    cfg100 = lm_100m()
+    n = cfg100.param_count()
+    print(f"model: {cfg100.name}, {n/1e6:.1f}M params, "
+          f"{len(jax.devices())} device(s)")
+
+    ckpt_dir = tempfile.mkdtemp(prefix="lm100m_")
+    # monkey-patch the registry so the production driver can resolve it
+    import repro.configs as configs
+    import repro.launch.train as lt
+    orig = configs.get_config
+    lt_get = lambda name, smoke=False: cfg100 if name == cfg100.name \
+        else orig(name, smoke)
+    configs.get_config = lt_get
+    lt.get_config = lt_get
+    try:
+        losses = []
+        fired = {"done": False}
+
+        def fault(step):
+            if args.fault_at and step == args.fault_at \
+                    and not fired["done"]:
+                fired["done"] = True
+                raise _Fault(f"simulated node failure at step {step}")
+
+        out = train(TrainConfig(arch=cfg100.name, smoke=False,
+                                steps=args.steps, batch=args.batch,
+                                seq=args.seq, ckpt_dir=ckpt_dir,
+                                ckpt_every=25, log_every=20),
+                    hooks={"on_step": lambda s, m: losses.append(
+                        float(m["loss"])), "fault": fault})
+        import math
+        ce0, ce1 = losses[0], sum(losses[-10:]) / 10
+        print(f"\nfinal: loss {ce0:.3f} -> {ce1:.3f} over "
+              f"{out['last_step'] + 1} steps "
+              f"(random = {math.log(cfg100.vocab):.3f})")
+        assert ce1 < ce0, "no learning"
+        if args.fault_at:
+            print("fault injected and recovered from checkpoint: OK")
+    finally:
+        configs.get_config = orig
+        lt.get_config = orig
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

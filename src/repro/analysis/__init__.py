@@ -1,0 +1,5 @@
+from .hlo import ModuleCost, analyze_module
+from .roofline import HW, RooflineTerms, roofline_terms, model_flops
+
+__all__ = ["ModuleCost", "analyze_module", "HW", "RooflineTerms",
+           "roofline_terms", "model_flops"]

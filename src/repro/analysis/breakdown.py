@@ -1,0 +1,96 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Per-instruction HBM/FLOP breakdown of a dry-run cell — the 'profile'
+used by the §Perf hillclimbing loop (we have no wall-clock on CPU; the
+lowered per-device HLO is the ground truth we optimize against).
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis.breakdown --arch yi-34b \
+      --shape decode_32k [--multi-pod] [--top 30] [--collectives]
+"""
+import argparse
+
+from repro.analysis import hlo as H
+
+
+def instruction_rows(text: str):
+    """[(bytes, flops, mult, opcode, line)] for every charged instruction,
+    scaled by enclosing while trip counts (one level, matching
+    analyze_module's call-tree walk for top-level scans)."""
+    comps, entry, symbols = H._parse_module(text)
+    trip_of = {}
+    for name, instrs in comps.items():
+        for ins in instrs:
+            if ins.opcode == "while":
+                m = H._TRIP_RE.search(ins.line)
+                t = int(m.group(1)) if m else 1
+                for r in H._CALLS_RE.findall(ins.line):
+                    trip_of[r] = trip_of.get(r, 1) * t
+
+    rows = []
+    for cname, instrs in comps.items():
+        mult = trip_of.get(cname, 1 if cname == entry else 0)
+        if mult == 0:
+            continue
+        for ins in instrs:
+            op = ins.opcode
+            b = f = 0.0
+            if op.startswith("fusion"):
+                refs = H._CALLS_RE.findall(ins.line)
+                ref = refs[0] if refs else None
+                b = (H._fusion_write_bytes(ins, ref, comps)
+                     + H._fusion_read_bytes(ins, ref, comps, symbols))
+            elif H._base_op(op).startswith("dot"):
+                f = H._dot_flops(ins, symbols)
+                b = H._mover_bytes(ins, symbols)
+            elif H._base_op(op) in H._COLLECTIVES:
+                b = H._mover_bytes(ins, symbols)
+            elif any(H._base_op(op).startswith(p)
+                     for p in H._MOVER_PREFIXES):
+                b = H._mover_bytes(ins, symbols)
+            else:
+                continue
+            rows.append((b * mult, f * mult, mult, op, ins.line))
+    return rows
+
+
+def main() -> None:
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=30)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--collectives", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    remat = args.remat
+    if remat is None and args.shape.startswith("train"):
+        remat = "full"
+    lowered, cfg, meta = lower_cell(args.arch, args.shape, mesh, remat=remat,
+                                    seq_parallel=args.seq_parallel)
+    text = lowered.compile().as_text()
+    rows = instruction_rows(text)
+    rows.sort(key=lambda r: r[0], reverse=True)
+    tot_b = sum(r[0] for r in rows)
+    tot_f = sum(r[1] for r in rows)
+    print(f"total bytes {tot_b/1e9:.2f} GB   total dot flops {tot_f/1e12:.3f}"
+          f" TFLOP   ({len(rows)} charged instructions)")
+    print(f"{'GB':>9} {'GFLOP':>9} {'x':>4}  instruction")
+    for b, f, m, op, line in rows[:args.top]:
+        print(f"{b/1e9:9.3f} {f/1e9:9.1f} {m:4d}  {line[:140]}")
+    if args.collectives:
+        print("\ncollectives:")
+        for b, f, m, op, line in rows:
+            if H._base_op(op) in H._COLLECTIVES:
+                print(f"{b/1e9:9.3f}GB x{m:4d}  {line[:130]}")
+
+
+if __name__ == "__main__":
+    main()

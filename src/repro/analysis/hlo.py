@@ -1,0 +1,483 @@
+"""Call-tree-aware cost analysis of optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any model that
+``lax.scan``s its layer stack under-reports FLOPs/bytes/collectives by the
+trip count (61x for deepseek-v3). This module re-derives the three roofline
+inputs from ``compiled.as_text()`` directly:
+
+  * flops            — dot ops: 2 * prod(result_shape) * prod(contract_dims),
+                       multiplied up the call tree by while trip counts.
+  * hbm_bytes        — per top-level data-moving op, operand + result bytes
+                       (a "every fusion reads its inputs from HBM and writes
+                       its outputs once" traffic model).
+  * collective bytes — per collective, ring-model link traffic (see below),
+                       also trip-count multiplied.
+
+After SPMD partitioning the module is the per-device program, so every
+number this module reports is PER DEVICE; the roofline terms divide by
+per-chip peaks only (never by chip count again).
+
+Ring traffic model per collective (bytes = full result size r, group n):
+  all-reduce          2 * r * (n-1)/n
+  all-gather          r * (n-1)/n
+  reduce-scatter      r * (n-1)          (operand = n * result)
+  all-to-all          r * (n-1)/n
+  collective-permute  r
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f8e4m3fn|f8e5m2|[sufc]\d+|token)"
+                       r"\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\([^)]*.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=(%[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# top-level ops whose operands+results we charge as HBM traffic
+_MOVER_PREFIXES = (
+    "fusion", "dot", "convolution", "copy", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "broadcast", "transpose",
+    "reduce", "reduce-window", "select-and-scatter", "concatenate", "pad",
+    "reverse", "slice", "convert", "iota", "custom-call", "sort", "rng",
+    "cholesky", "triangular-solve", "exponential", "log", "tanh", "add",
+    "multiply", "subtract", "divide", "maximum", "minimum", "compare",
+    "select", "clamp", "negate", "abs", "sign", "floor", "ceil", "round",
+) + _COLLECTIVES
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(type_str: str) -> list:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d.strip()]
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list
+    line: str
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0          # ring-model link traffic
+    collective_result_bytes: float = 0.0   # raw summed result sizes
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    dot_count: float = 0.0
+    while_trips: list = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": self.collective_bytes,
+                "collective_result_bytes": self.collective_result_bytes,
+                "collective_counts": dict(self.collective_counts),
+                "dot_count": self.dot_count,
+                "while_trips": list(self.while_trips)}
+
+
+def _split_rhs(rhs: str):
+    """RHS of an instruction: '<type> <opcode>(<operands>), attrs...'."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):                       # tuple type
+        depth, i = 0, 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        type_str, rest = rhs[:i + 1], rhs[i + 1:].strip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return rhs, "", ""
+        type_str, rest = rhs[:sp], rhs[sp + 1:].strip()
+    p = rest.find("(")
+    if p < 0:
+        return type_str, rest, ""
+    opcode = rest[:p]
+    depth, j = 0, p
+    for j in range(p, len(rest)):
+        depth += rest[j] == "("
+        depth -= rest[j] == ")"
+        if depth == 0:
+            break
+    return type_str, opcode, rest[p + 1:j]
+
+
+def _parse_module(text: str):
+    """-> (comps: {name: [instr]}, entry_name, symbols: {name: type_str})."""
+    comps, symbols = {}, {}
+    cur, cur_name, entry = None, None, None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("->" in line or line.lstrip().startswith(("ENTRY", "%"))) \
+                and line.endswith("{") and "=" not in line.split("(")[0]:
+            cur_name = hdr.group(1)
+            cur = []
+            comps[cur_name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur_name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        type_str, opcode, operand_str = _split_rhs(rhs)
+        operands = re.findall(r"%[\w.\-]+", operand_str)
+        instr = _Instr(name, type_str, opcode, operands, line)
+        cur.append(instr)
+        symbols[name] = type_str
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry, symbols
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _collective_traffic(op: str, result_bytes: int, n: int) -> float:
+    n = max(n, 2)
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / n
+    if op == "reduce-scatter":
+        return float(result_bytes) * (n - 1)
+    if op == "collective-permute":
+        return float(result_bytes)
+    return float(result_bytes) * (n - 1) / n     # all-gather / all-to-all
+
+
+def _base_op(opcode: str) -> str:
+    """'all-reduce-start' -> 'all-reduce'; 'all-gather-done' -> skip tag."""
+    if opcode.endswith("-done"):
+        return ""
+    if opcode.endswith("-start"):
+        opcode = opcode[:-6]
+    return opcode
+
+
+def analyze_module(text: str, default_group: int = 16) -> ModuleCost:
+    """Walk the call tree from ENTRY, multiplying while bodies by their
+    known_trip_count. Returns per-device ModuleCost."""
+    comps, entry, symbols = _parse_module(text)
+    memo = {}
+
+    # computations reached via `calls=` from fusions: count dot/collectives
+    # (they execute), but NOT generic operand bytes (the fusion call site
+    # already charges its HBM reads/writes).
+    def comp_cost(name: str, inside_fusion: bool) -> ModuleCost:
+        key = (name, inside_fusion)
+        if key in memo:
+            return memo[key]
+        memo[key] = ModuleCost()               # cycle guard
+        cost = ModuleCost()
+        for ins in comps.get(name, ()):
+            op = ins.opcode
+            if op == "while":
+                m = _TRIP_RE.search(ins.line)
+                trips = int(m.group(1)) if m else 1
+                cost.while_trips.append(trips)
+                refs = _CALLS_RE.findall(ins.line)
+                for r in refs:
+                    sub = comp_cost(r, inside_fusion)
+                    _accumulate(cost, sub, trips)
+                continue
+            if op in ("conditional",):
+                m = _BRANCHES_RE.search(ins.line)
+                refs = (re.findall(r"%[\w.\-]+", m.group(1)) if m
+                        else _CALLS_RE.findall(ins.line))
+                if refs:   # charge the max-cost branch
+                    subs = [comp_cost(r, inside_fusion) for r in refs]
+                    best = max(subs, key=lambda c: c.flops + c.hbm_bytes)
+                    _accumulate(cost, best, 1)
+                continue
+            if op == "call":
+                for r in _CALLS_RE.findall(ins.line):
+                    _accumulate(cost, comp_cost(r, inside_fusion), 1)
+                continue
+            if op.startswith("fusion"):
+                refs = _CALLS_RE.findall(ins.line)
+                if not inside_fusion:
+                    cost.hbm_bytes += _fusion_write_bytes(
+                        ins, refs[0] if refs else None, comps)
+                    cost.hbm_bytes += _fusion_read_bytes(
+                        ins, refs[0] if refs else None, comps, symbols)
+                for r in refs:
+                    _accumulate(cost, comp_cost(r, True), 1)
+                continue
+            base = _base_op(op)
+            if not base:
+                continue
+            if base in _COLLECTIVES:
+                rb = _type_bytes(ins.type_str)
+                n = _group_size(ins.line, default_group)
+                cost.collective_result_bytes += rb
+                cost.collective_bytes += _collective_traffic(base, rb, n)
+                cost.collective_counts[base] += 1
+                if not inside_fusion:
+                    cost.hbm_bytes += _io_bytes(ins, symbols)
+                continue
+            if base.startswith("dot"):
+                cost.flops += _dot_flops(ins, symbols)
+                cost.dot_count += 1
+                if not inside_fusion:
+                    cost.hbm_bytes += _io_bytes(ins, symbols)
+                continue
+            if base.startswith("convolution"):
+                cost.flops += _conv_flops(ins, symbols)
+                if not inside_fusion:
+                    cost.hbm_bytes += _io_bytes(ins, symbols)
+                continue
+            if not inside_fusion and any(base.startswith(p)
+                                         for p in _MOVER_PREFIXES):
+                cost.hbm_bytes += _mover_bytes(ins, symbols)
+        memo[key] = cost
+        return cost
+
+    def _accumulate(dst: ModuleCost, src: ModuleCost, mult: float):
+        dst.flops += mult * src.flops
+        dst.hbm_bytes += mult * src.hbm_bytes
+        dst.collective_bytes += mult * src.collective_bytes
+        dst.collective_result_bytes += mult * src.collective_result_bytes
+        dst.dot_count += mult * src.dot_count
+        for k, v in src.collective_counts.items():
+            dst.collective_counts[k] += mult * v
+        dst.while_trips.extend(src.while_trips)
+
+    return comp_cost(entry, False)
+
+
+def _io_bytes(ins: _Instr, symbols: dict) -> float:
+    total = float(_type_bytes(ins.type_str))
+    for o in ins.operands:
+        total += _type_bytes(symbols.get(o, ""))
+    return total
+
+
+_SLICE_OPS = ("dynamic-slice", "gather", "slice")
+
+
+def _mover_bytes(ins: _Instr, symbols: dict) -> float:
+    """HBM traffic of one top-level op: slice-like ops touch only the
+    sliced region; dynamic-update-slice / scatter are in-place and touch
+    only the update; everything else reads operands + writes result."""
+    base = _base_op(ins.opcode)
+    if any(base.startswith(p) for p in _SLICE_OPS):
+        return 2.0 * _type_bytes(ins.type_str)
+    if base.startswith("dynamic-update-slice"):
+        upd = (_type_bytes(symbols.get(ins.operands[1], ""))
+               if len(ins.operands) > 1 else 0)
+        return 2.0 * upd
+    if base.startswith("scatter"):
+        upd = (_type_bytes(symbols.get(ins.operands[-1], ""))
+               if ins.operands else 0)
+        return 2.0 * upd
+    return _io_bytes(ins, symbols)
+
+
+# ops that merely "view" their single data operand (element-count-preserving,
+# fusable without extra traffic)
+_VIEW_OPS = ("convert", "bitcast", "copy", "reshape", "transpose",
+             "broadcast", "negate")
+
+
+def _view_chains(inner):
+    """name -> root parameter name, following single-operand view chains."""
+    view_of = {}
+    for i in inner:
+        if i.opcode.startswith("parameter"):
+            view_of[i.name] = i.name
+        elif any(i.opcode.startswith(v) for v in _VIEW_OPS) \
+                and len(i.operands) == 1 and i.operands[0] in view_of:
+            view_of[i.name] = view_of[i.operands[0]]
+    return view_of
+
+
+def _fusion_write_bytes(ins: _Instr, comp_name, comps) -> float:
+    """Write traffic of a fusion. An in-place dynamic-update-slice root
+    (or tuple element / view of one) writes only the update region."""
+    if comp_name is None or comp_name not in comps:
+        return float(_type_bytes(ins.type_str))
+    inner = comps[comp_name]
+    if not inner:
+        return float(_type_bytes(ins.type_str))
+    local = {i.name: i for i in inner}
+
+    def resolve(name):
+        """Walk back through view ops to the producing 'real' op."""
+        seen = 0
+        while name in local and seen < 32:
+            i = local[name]
+            if any(i.opcode.startswith(v) for v in _VIEW_OPS) \
+                    and len(i.operands) == 1:
+                name = i.operands[0]
+                seen += 1
+                continue
+            return i
+        return None
+
+    def one(i: _Instr) -> float:
+        r = resolve(i.name) or i
+        if _base_op(r.opcode).startswith("dynamic-update-slice"):
+            upd = local.get(r.operands[1]) if len(r.operands) > 1 else None
+            return float(_type_bytes(upd.type_str)) if upd else \
+                float(_type_bytes(r.type_str))
+        return float(_type_bytes(i.type_str))
+
+    root = inner[-1]
+    if root.opcode.startswith("tuple"):
+        total = 0.0
+        for o in root.operands:
+            total += one(local[o]) if o in local else 0.0
+        return total
+    return one(root)
+
+
+def _fusion_read_bytes(ins: _Instr, comp_name, comps, symbols) -> float:
+    """Utilization-aware read traffic of a fusion: a parameter consumed only
+    through view chains ending in slice-like ops is charged at slice size;
+    a view chain ending as operand 0 of an in-place dynamic-update-slice is
+    charged at the update size. Anything else is a full read."""
+    if comp_name is None or comp_name not in comps:
+        return sum(_type_bytes(symbols.get(o, "")) for o in ins.operands)
+    inner = comps[comp_name]
+    local = {i.name: i.type_str for i in inner}
+    view_of = _view_chains(inner)
+    param_ix = {}
+    for i in inner:
+        if i.opcode.startswith("parameter"):
+            m = re.search(r"parameter\((\d+)\)", i.line)
+            if m:
+                param_ix[i.name] = int(m.group(1))
+    charges = {}   # operand index -> bytes charged (max over consumers)
+    for i in inner:
+        base = _base_op(i.opcode)
+        is_view = any(i.opcode.startswith(v) for v in _VIEW_OPS) \
+            and len(i.operands) == 1
+        for pos, o in enumerate(i.operands):
+            p = view_of.get(o)
+            if p is None or p not in param_ix:
+                continue
+            if is_view:
+                continue                       # deferred to chain consumer
+            ix = param_ix[p]
+            full = _type_bytes(symbols.get(ins.operands[ix], "")
+                               if ix < len(ins.operands) else "")
+            if any(base.startswith(s) for s in _SLICE_OPS) and pos == 0:
+                c = float(_type_bytes(i.type_str))
+            elif base.startswith("dynamic-update-slice") and pos == 0:
+                c = float(_type_bytes(local.get(i.operands[1], "")))
+            else:
+                c = float(full)
+            charges[ix] = max(charges.get(ix, 0.0), min(c, float(full)))
+    # a view chain that reaches the fusion ROOT directly (pure reformat
+    # fusion) is a full read of that parameter
+    root = inner[-1] if inner else None
+    if root is not None:
+        names = ([root.name] if not root.opcode.startswith("tuple")
+                 else list(root.operands))
+        for nm in names:
+            p = view_of.get(nm)
+            if p in param_ix:
+                r = _resolve_nonview(nm, {i.name: i for i in inner})
+                if r is None or not _base_op(r.opcode).startswith(
+                        "dynamic-update-slice"):
+                    ix = param_ix[p]
+                    full = _type_bytes(
+                        symbols.get(ins.operands[ix], "")
+                        if ix < len(ins.operands) else "")
+                    charges[ix] = max(charges.get(ix, 0.0), float(full))
+    return sum(charges.values())
+
+
+def _resolve_nonview(name, local):
+    seen = 0
+    while name in local and seen < 32:
+        i = local[name]
+        if any(i.opcode.startswith(v) for v in _VIEW_OPS) \
+                and len(i.operands) == 1:
+            name = i.operands[0]
+            seen += 1
+            continue
+        return i
+    return None
+
+
+def _dot_flops(ins: _Instr, symbols: dict) -> float:
+    result_elems = 1
+    for d in _shape_dims(ins.type_str):
+        result_elems *= d
+    m = _CDIMS_RE.search(ins.line)
+    if not m or not ins.operands:
+        return 2.0 * result_elems            # degenerate: dot as outer prod
+    lhs_dims = _shape_dims(symbols.get(ins.operands[0], ""))
+    contract = 1
+    for ci in m.group(1).split(","):
+        ci = ci.strip()
+        if ci and int(ci) < len(lhs_dims):
+            contract *= lhs_dims[int(ci)]
+    return 2.0 * result_elems * contract
+
+
+def _conv_flops(ins: _Instr, symbols: dict) -> float:
+    # output elems * 2 * (kernel spatial * in_channels): approximate via
+    # rhs (kernel) total elems / out_channels
+    result_elems = 1
+    for d in _shape_dims(ins.type_str):
+        result_elems *= d
+    if len(ins.operands) < 2:
+        return 2.0 * result_elems
+    k_dims = _shape_dims(symbols.get(ins.operands[1], ""))
+    k_elems = 1
+    for d in k_dims:
+        k_elems *= d
+    out_ch = k_dims[-1] if k_dims else 1
+    return 2.0 * result_elems * max(k_elems // max(out_ch, 1), 1)

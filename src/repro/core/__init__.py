@@ -1,0 +1,14 @@
+"""IMA-GNN core: the paper's contribution as composable JAX modules."""
+from .graph import Graph, GraphStats, TABLE2_DATASETS, TAXI_STATS, random_graph, dataset_like
+from .costmodel import (HardwareParams, DEFAULT_HW, NetMetrics, CoreLatency,
+                        predict, compute_latency, communicate_latency, power,
+                        headline_averages, table1, pick_setting)
+from . import gnn, taxi, partition
+
+__all__ = [
+    "Graph", "GraphStats", "TABLE2_DATASETS", "TAXI_STATS", "random_graph",
+    "dataset_like", "HardwareParams", "DEFAULT_HW", "NetMetrics",
+    "CoreLatency", "predict", "compute_latency", "communicate_latency",
+    "power", "headline_averages", "table1", "pick_setting",
+    "gnn", "taxi", "partition",
+]

@@ -1,0 +1,266 @@
+"""Graph partitioning + the centralized/decentralized/semi execution planner.
+
+``partition(graph, k)`` splits a CSR graph into k clusters (BFS-grown, a
+METIS-lite heuristic that balances node counts and keeps neighborhoods
+together), and derives everything the runtime and the cost model need:
+
+  * per-cluster node assignment and *padded, device-local* subgraphs whose
+    neighbor indices point into a device-local feature table,
+  * halo structure — which remote nodes each cluster must receive
+    (the paper's bidirectional inter-device communication volume e_ij),
+  * per-cluster statistics (local c_s, boundary bytes) for Eqs. 4/7.
+
+``ExecutionPlan`` is the paper's technique as a first-class object: the same
+GNN runs centralized (one device owns everything), decentralized (one cluster
+per device, halo exchange per layer), or semi-decentralized (clusters of
+clusters — the paper's §5 guideline).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .graph import Graph, GraphStats
+
+
+@dataclasses.dataclass
+class Partition:
+    assignment: np.ndarray        # [N] int32 cluster id per node
+    n_clusters: int
+    # device-local tensors, all padded to uniform sizes across clusters:
+    local_nodes: np.ndarray       # [K, n_max] int32 global node ids (pad: -1)
+    local_mask: np.ndarray        # [K, n_max] bool
+    halo_nodes: np.ndarray        # [K, h_max] int32 global ids needed from
+    halo_src: np.ndarray          # [K, h_max] int32 owning cluster (pad: -1)
+    comm_volume: np.ndarray       # [K, K] int64 e_ij boundary-edge counts
+
+    @property
+    def n_max(self) -> int:
+        return self.local_nodes.shape[1]
+
+    @property
+    def h_max(self) -> int:
+        return self.halo_nodes.shape[1]
+
+    def cluster_stats(self, g: Graph, k: int) -> GraphStats:
+        nodes = self.local_nodes[k][self.local_mask[k]]
+        deg = np.diff(g.indptr)[nodes] if len(nodes) else np.zeros(1)
+        return GraphStats(f"cluster{k}", len(nodes), int(deg.sum()),
+                          g.feature_len, float(deg.mean() if len(deg) else 0))
+
+
+def _bfs_clusters(g: Graph, k: int, seed: int = 0) -> np.ndarray:
+    """Greedy balanced BFS growth from k spread-out seeds."""
+    n = g.n_nodes
+    target = -(-n // k)
+    rng = np.random.default_rng(seed)
+    assignment = np.full(n, -1, np.int32)
+    seeds = rng.choice(n, size=min(k, n), replace=False)
+    frontiers = [[int(s)] for s in seeds]
+    sizes = np.zeros(k, np.int64)
+    for c, s in enumerate(seeds):
+        assignment[s] = c
+        sizes[c] = 1
+    active = True
+    while active:
+        active = False
+        for c in range(k):
+            if sizes[c] >= target or not frontiers[c]:
+                continue
+            nxt = []
+            for u in frontiers[c]:
+                for v in g.indices[g.indptr[u]:g.indptr[u + 1]]:
+                    if assignment[v] == -1 and sizes[c] < target:
+                        assignment[v] = c
+                        sizes[c] += 1
+                        nxt.append(int(v))
+            frontiers[c] = nxt
+            active = active or bool(nxt)
+    # orphans (disconnected): round-robin to the emptiest clusters
+    for u in np.nonzero(assignment == -1)[0]:
+        c = int(np.argmin(sizes))
+        assignment[u] = c
+        sizes[c] += 1
+    return assignment
+
+
+def partition(g: Graph, n_clusters: int, seed: int = 0) -> Partition:
+    assignment = _bfs_clusters(g, n_clusters, seed)
+    k = n_clusters
+    members = [np.nonzero(assignment == c)[0].astype(np.int32)
+               for c in range(k)]
+    n_max = max(max(len(m) for m in members), 1)
+
+    # halo: for each cluster, remote sources of its boundary edges
+    halos, comm = [], np.zeros((k, k), np.int64)
+    dst_cluster = assignment[np.repeat(np.arange(g.n_nodes),
+                                       np.diff(g.indptr))]
+    src_cluster = assignment[g.indices]
+    for c in range(k):
+        mask = (dst_cluster == c) & (src_cluster != c)
+        remote = np.unique(g.indices[mask])
+        halos.append(remote.astype(np.int32))
+        pairs, counts = np.unique(src_cluster[mask], return_counts=True)
+        comm[c, pairs] = counts
+    h_max = max(max((len(h) for h in halos), default=0), 1)
+
+    local_nodes = np.full((k, n_max), -1, np.int32)
+    local_mask = np.zeros((k, n_max), bool)
+    halo_nodes = np.full((k, h_max), 0, np.int32)
+    halo_src = np.full((k, h_max), -1, np.int32)
+    for c in range(k):
+        local_nodes[c, :len(members[c])] = members[c]
+        local_mask[c, :len(members[c])] = True
+        halo_nodes[c, :len(halos[c])] = halos[c]
+        halo_src[c, :len(halos[c])] = assignment[halos[c]]
+    return Partition(assignment, k, local_nodes, local_mask,
+                     halo_nodes, halo_src, comm)
+
+
+@dataclasses.dataclass
+class LocalSubgraph:
+    """Per-device padded subgraph in device-local index space.
+
+    Feature table layout per device: rows [0, n_max) are owned nodes,
+    rows [n_max, n_max + h_max) are halo (received) nodes. Neighbor indices
+    point into this concatenated table.
+    """
+    neighbors: np.ndarray   # [K, n_max, S] int32 local-space indices
+    weights: np.ndarray     # [K, n_max, S] float32 (0 = padding)
+    node_mask: np.ndarray   # [K, n_max] bool
+
+
+def build_local_subgraphs(g: Graph, part: Partition, sample: int,
+                          self_loops: bool = True) -> LocalSubgraph:
+    k, n_max, h_max = part.n_clusters, part.n_max, part.h_max
+    nbr = np.zeros((k, n_max, sample), np.int32)
+    wts = np.zeros((k, n_max, sample), np.float32)
+    for c in range(k):
+        # global -> local mapping for owned + halo nodes
+        g2l = {}
+        for li, u in enumerate(part.local_nodes[c]):
+            if u >= 0:
+                g2l[int(u)] = li
+        for hi, u in enumerate(part.halo_nodes[c]):
+            if part.halo_src[c, hi] >= 0:
+                g2l[int(u)] = n_max + hi
+        for li in range(n_max):
+            u = part.local_nodes[c, li]
+            if u < 0:
+                continue
+            lo, hi = int(g.indptr[u]), int(g.indptr[u + 1])
+            take = min(hi - lo, sample - (1 if self_loops else 0))
+            for t in range(take):
+                v = int(g.indices[lo + t])
+                nbr[c, li, t] = g2l[v]
+                wts[c, li, t] = (g.edge_weight[lo + t]
+                                 if g.edge_weight is not None else 1.0)
+            if self_loops:
+                nbr[c, li, take] = li
+                wts[c, li, take] = 1.0
+    return LocalSubgraph(nbr, wts, part.local_mask)
+
+
+def gather_features(g: Graph, part: Partition) -> np.ndarray:
+    """[K, n_max, F] owned-node features per device (pad rows zero)."""
+    k, n_max = part.n_clusters, part.n_max
+    f = g.feature_len
+    out = np.zeros((k, n_max, f), np.float32)
+    for c in range(k):
+        m = part.local_mask[c]
+        out[c, m] = g.features[part.local_nodes[c][m]]
+    return out
+
+
+def halo_exchange_tables(part: Partition):
+    """Precomputed gather plan for the halo exchange.
+
+    Returns (src_cluster [K, h_max] int32, src_slot [K, h_max] int32,
+    halo_mask [K, h_max] bool): device c's halo row h is the feature at
+    (src_cluster[c, h], src_slot[c, h]) — an all-gather + gather realizes the
+    exchange (see repro.distributed.halo).
+    """
+    k, h_max = part.n_clusters, part.h_max
+    slot = np.zeros((k, h_max), np.int32)
+    # global id -> owner slot
+    owner_slot = np.zeros(part.assignment.shape[0], np.int32)
+    for c in range(k):
+        m = part.local_mask[c]
+        owner_slot[part.local_nodes[c][m]] = np.nonzero(m)[0]
+    for c in range(k):
+        valid = part.halo_src[c] >= 0
+        slot[c, valid] = owner_slot[part.halo_nodes[c][valid]]
+    return part.halo_src, slot, part.halo_src >= 0
+
+
+def rebalance(g: Graph, part: Partition, latency: np.ndarray,
+              frac: float = 0.25, seed: int = 0) -> Partition:
+    """Straggler mitigation: shift load away from slow clusters.
+
+    ``latency``: [K] observed (or cost-model-predicted) per-cluster step
+    latency. Boundary nodes of clusters slower than the mean are handed to
+    their fastest adjacent cluster (at most ``frac`` of the slow cluster's
+    nodes move), then the partition tables are rebuilt. Deterministic in
+    ``seed``. This is the serving-path analogue of the launcher's
+    retry-with-shrunk-mesh: the paper's decentralized setting re-balances
+    c_s when a node's latency spikes (DESIGN.md §6).
+    """
+    latency = np.asarray(latency, np.float64)
+    k = part.n_clusters
+    assignment = part.assignment.copy()
+    mean = latency.mean()
+    for c in np.argsort(-latency):
+        if latency[c] <= mean * 1.05:
+            break
+        members = np.nonzero(assignment == c)[0]
+        budget = max(int(len(members) * frac), 1)
+        # boundary nodes: owned nodes with at least one out-of-cluster edge
+        moved = 0
+        for u in members:
+            lo, hi = int(g.indptr[u]), int(g.indptr[u + 1])
+            nbr_clusters = assignment[g.indices[lo:hi]]
+            remote = nbr_clusters[nbr_clusters != c]
+            if len(remote) == 0:
+                continue
+            # move to the fastest adjacent cluster that is below the mean
+            cand = np.unique(remote)
+            cand = cand[latency[cand] < mean]
+            if len(cand) == 0:
+                continue
+            target = int(cand[np.argmin(latency[cand])])
+            assignment[u] = target
+            moved += 1
+            if moved >= budget:
+                break
+    # rebuild partition tables from the adjusted assignment
+    return _from_assignment(g, assignment, k)
+
+
+def _from_assignment(g: Graph, assignment: np.ndarray, k: int) -> Partition:
+    """Build full Partition tables from a given node->cluster assignment."""
+    members = [np.nonzero(assignment == c)[0].astype(np.int32)
+               for c in range(k)]
+    n_max = max(max(len(m) for m in members), 1)
+    halos, comm = [], np.zeros((k, k), np.int64)
+    dst_cluster = assignment[np.repeat(np.arange(g.n_nodes),
+                                       np.diff(g.indptr))]
+    src_cluster = assignment[g.indices]
+    for c in range(k):
+        mask = (dst_cluster == c) & (src_cluster != c)
+        remote = np.unique(g.indices[mask])
+        halos.append(remote.astype(np.int32))
+        pairs, counts = np.unique(src_cluster[mask], return_counts=True)
+        comm[c, pairs] = counts
+    h_max = max(max((len(h) for h in halos), default=0), 1)
+    local_nodes = np.full((k, n_max), -1, np.int32)
+    local_mask = np.zeros((k, n_max), bool)
+    halo_nodes = np.full((k, h_max), 0, np.int32)
+    halo_src = np.full((k, h_max), -1, np.int32)
+    for c in range(k):
+        local_nodes[c, :len(members[c])] = members[c]
+        local_mask[c, :len(members[c])] = True
+        halo_nodes[c, :len(halos[c])] = halos[c]
+        halo_src[c, :len(halos[c])] = assignment[halos[c]]
+    return Partition(assignment, k, local_nodes, local_mask,
+                     halo_nodes, halo_src, comm)

@@ -1,0 +1,4 @@
+from .tokens import TokenStream, synthetic_batch
+from .graphs import graph_batches
+
+__all__ = ["TokenStream", "synthetic_batch", "graph_batches"]

@@ -1,0 +1,148 @@
+"""Decentralized GNN runtime: shard_map over clusters + halo exchange.
+
+One device per cluster (the paper's "edge device"). Each layer needs remote
+neighbor features (the paper's bidirectional e_ij communication volume); two
+exchange strategies are provided:
+
+  * ``allgather`` — every device gathers all owned feature tables and selects
+    its halo rows. Simple, bandwidth = K * n_max * F per device. This is the
+    paper-faithful "broadcast within the cluster" behavior.
+  * ``alltoall``  — each device sends only the rows its peers actually need
+    (precomputed send lists). Traffic matches the true boundary volume e_ij —
+    the beyond-paper optimization (see EXPERIMENTS.md §Perf-GNN).
+
+All tables are padded to static shapes so a single compiled program serves
+every cluster (SPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.partition import Partition
+from repro.kernels.csr_aggregate import csr_aggregate_ref
+
+
+@dataclasses.dataclass
+class HaloPlan:
+    """Static exchange plan derived from a Partition (numpy, host-side)."""
+    src_cluster: np.ndarray    # [K, h_max] owner cluster of each halo row
+    src_slot: np.ndarray       # [K, h_max] owner-local slot
+    halo_mask: np.ndarray      # [K, h_max] bool
+    send_slot: np.ndarray      # [K, K, s_max] rows device k sends to peer j
+    send_mask: np.ndarray      # [K, K, s_max] bool
+    recv_to_halo: np.ndarray   # [K, K, s_max] halo row filled by recv (or 0)
+    recv_mask: np.ndarray      # [K, K, s_max] bool
+
+    @property
+    def s_max(self) -> int:
+        return self.send_slot.shape[2]
+
+
+def build_halo_plan(part: Partition) -> HaloPlan:
+    from repro.core.partition import halo_exchange_tables
+    src_c, src_s, mask = halo_exchange_tables(part)
+    k, h_max = src_c.shape
+    # send lists: sends[c][j] = local slots of c needed by j
+    sends = [[[] for _ in range(k)] for _ in range(k)]
+    recv_halo = [[[] for _ in range(k)] for _ in range(k)]
+    for c in range(k):
+        for h in range(h_max):
+            if mask[c, h]:
+                owner = int(src_c[c, h])
+                sends[owner][c].append(int(src_s[c, h]))
+                recv_halo[c][owner].append(h)
+    s_max = max(max((len(s) for row in sends for s in row), default=0), 1)
+    send_slot = np.zeros((k, k, s_max), np.int32)
+    send_mask = np.zeros((k, k, s_max), bool)
+    recv_to_halo = np.zeros((k, k, s_max), np.int32)
+    recv_mask = np.zeros((k, k, s_max), bool)
+    for c in range(k):
+        for j in range(k):
+            s = sends[c][j]
+            send_slot[c, j, :len(s)] = s
+            send_mask[c, j, :len(s)] = True
+            r = recv_halo[c][j]
+            recv_to_halo[c, j, :len(r)] = r
+            recv_mask[c, j, :len(r)] = True
+    return HaloPlan(src_c, src_s, mask, send_slot, send_mask,
+                    recv_to_halo, recv_mask)
+
+
+def _exchange_allgather(x_own, src_c, src_s, mask, axis):
+    full = jax.lax.all_gather(x_own, axis)            # [K, n_max, F]
+    halo = full[src_c, src_s]                         # [h_max, F]
+    return halo * mask[:, None]
+
+
+def _exchange_alltoall(x_own, send_slot, send_mask, recv_to_halo, recv_mask,
+                       h_max, axis):
+    # send[j] = rows this device owes peer j: [K, s_max, F]
+    send = x_own[send_slot] * send_mask[..., None]
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                              tiled=False)            # [K, s_max, F]
+    halo = jnp.zeros((h_max, x_own.shape[-1]), x_own.dtype)
+    flat_idx = recv_to_halo.reshape(-1)
+    flat = (recv * recv_mask[..., None]).reshape(-1, x_own.shape[-1])
+    # masked scatter: padding rows all target slot 0 with zero contribution
+    return halo.at[flat_idx].add(flat * recv_mask.reshape(-1)[:, None])
+
+
+def make_decentralized_forward(mesh, cfg, plan: HaloPlan, n_max: int,
+                               mode: str = "alltoall", axis: str = "data"):
+    """Build the SPMD decentralized GNN forward for a given mesh/plan.
+
+    Inputs (sharded on the leading cluster axis over ``axis``):
+      feats   [K, n_max, F_in]   owned node features
+      nbr/wts [K, n_max, S]      device-local padded subgraph
+    Returns [K, n_max, out_dim] embeddings for owned nodes.
+    """
+    h_max = plan.src_cluster.shape[1]
+    consts = jax.tree.map(
+        jnp.asarray,
+        dict(src_c=plan.src_cluster, src_s=plan.src_slot,
+             hmask=plan.halo_mask.astype(jnp.float32),
+             send_slot=plan.send_slot, send_mask=plan.send_mask,
+             recv_to_halo=plan.recv_to_halo, recv_mask=plan.recv_mask))
+
+    def device_fn(params, feats, nbr, wts, src_c, src_s, hmask,
+                  send_slot, send_mask, recv_to_halo, recv_mask):
+        x = feats[0]                                   # [n_max, F]
+        nbr, wts = nbr[0], wts[0]
+        n_layers = len(params)
+        for i, layer in enumerate(params):
+            if mode == "allgather":
+                halo = _exchange_allgather(x, src_c[0], src_s[0], hmask[0],
+                                           axis)
+            else:
+                halo = _exchange_alltoall(x, send_slot[0], send_mask[0],
+                                          recv_to_halo[0], recv_mask[0],
+                                          h_max, axis)
+            table = jnp.concatenate([x, halo], axis=0)  # [n_max+h_max, F]
+            z = csr_aggregate_ref(table, nbr, wts)
+            x = jnp.dot(z, layer["w"]) + layer["b"]
+            if i < n_layers - 1:
+                x = jax.nn.relu(x)
+        return x[None]
+
+    shard = P(axis)
+    fn = shard_map(
+        device_fn, mesh=mesh,
+        in_specs=(P(), shard, shard, shard, shard, shard, shard,
+                  shard, shard, shard, shard),
+        out_specs=shard,
+        check_rep=False)
+
+    @jax.jit
+    def forward(params, feats, nbr, wts):
+        return fn(params, feats, nbr, wts, consts["src_c"], consts["src_s"],
+                  consts["hmask"], consts["send_slot"], consts["send_mask"],
+                  consts["recv_to_halo"], consts["recv_mask"])
+
+    return forward

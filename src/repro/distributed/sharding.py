@@ -1,0 +1,238 @@
+"""Sharding rules: TP / FSDP / EP / ZeRO-1 partition specs for every arch.
+
+Strategy (DESIGN.md §6):
+  * TP over 'model': attention projections column/row-parallel on the packed
+    head dim (always 16-divisible in the assigned configs), FFN wi col / wo
+    row, vocab-sharded embeddings+logits when the vocab divides.
+  * EP over 'model' for MoE when n_experts divides the axis (deepseek-v3);
+    otherwise inner-dim TP of the expert FFN (grok-1's 8 experts).
+  * FSDP over 'data' for >= 9 B archs: params (and their optimizer state)
+    additionally sharded on the first divisible non-TP dim.
+  * ZeRO-1 everywhere: optimizer moments get the FSDP treatment even when
+    params are replicated over 'data'.
+  * Multi-pod: the 'pod' axis joins data parallelism (batch + FSDP/ZeRO) —
+    gradients reduce hierarchically (intra-pod first, then across).
+
+Divisibility is always checked; anything that doesn't divide cleanly is
+replicated on that dim (recorded — the roofline table shows the cost).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.models.config import ModelConfig
+
+FSDP_ARCHS = {"yi-34b", "grok-1-314b", "deepseek-v3-671b",
+              "recurrentgemma-9b"}
+
+
+def dp_axes(mesh) -> tuple:
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def _div(size: int, mesh, axis: str) -> bool:
+    return size % int(np.prod([mesh.shape[a] for a in
+                               ([axis] if isinstance(axis, str) else axis)])) == 0
+
+
+def _axis_size(mesh, axes) -> int:
+    axes = [axes] if isinstance(axes, str) else list(axes)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(size: int, mesh, axis):
+    """axis if it divides size, else None (replicated)."""
+    return axis if size % _axis_size(mesh, axis) == 0 else None
+
+
+def _leaf_spec(path, leaf, cfg: ModelConfig, mesh) -> P:
+    """TP spec for one parameter leaf, from its key path + shape."""
+    names = [k.key for k in path if isinstance(k, DictKey)]
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    scanned = "main" in names
+    nd = len(shape) - (1 if scanned else 0)   # dims after the cycle axis
+
+    def out(*spec):
+        spec = tuple(spec) + (None,) * (nd - len(spec))
+        return P(*(((None,) + spec) if scanned else spec))
+
+    m = "model"
+    if name == "tok":
+        return out(_maybe(shape[-2], mesh, m), None)
+    if name == "head":
+        return out(None, _maybe(shape[-1], mesh, m))
+    # attention / mixers (column-parallel in, row-parallel out)
+    if name in ("wi", "wo") and nd == 3:             # MoE experts [E, ., .]
+        if _div(shape[-3], mesh, m):
+            return out(m, None, None)                # EP
+        if name == "wi":
+            return out(None, None, _maybe(shape[-1], mesh, m))
+        return out(None, _maybe(shape[-2], mesh, m), None)
+    if name in ("wq", "wk", "wv", "wuq", "wukv", "wx", "w_a", "w_i",
+                "wr", "wg", "w1"):
+        return out(None, _maybe(shape[-1], mesh, m))
+    if name in ("wo",):
+        return out(_maybe(shape[-2], mesh, m), None)
+    if name in ("wdq", "wdkv", "w2", "proj"):
+        return out(None, None)                       # small latents: replicate
+    if name == "conv":
+        return out(None, _maybe(shape[-1], mesh, m))
+    if name == "lam":
+        return out(_maybe(shape[-1], mesh, m))
+    if name in ("shared_wi",):
+        return out(None, _maybe(shape[-1], mesh, m))
+    if name in ("shared_wo",):
+        return out(_maybe(shape[-2], mesh, m), None)
+    if name == "router":
+        return out(None, None)
+    if name in ("wi",):                              # dense FFN [D, F]
+        return out(None, _maybe(shape[-1], mesh, m))
+    return out(*([None] * nd))
+
+
+def _fsdp_augment(spec: P, leaf, mesh, dp) -> P:
+    """Add 'data'(+pod) sharding on the first free divisible dim."""
+    used = set()
+    for p in spec:
+        for a in (p if isinstance(p, tuple) else (p,)):
+            used.add(a)
+    if used & set(dp):                 # already FSDP-sharded; idempotent
+        return spec
+    parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+    for i, (p, s) in enumerate(zip(parts, leaf.shape)):
+        if p is None and s % _axis_size(mesh, dp) == 0 and s >= 1024:
+            parts[i] = dp if len(dp) > 1 else dp[0]
+            break
+    return P(*parts)
+
+
+def param_shardings(params: Any, cfg: ModelConfig, mesh,
+                    fsdp: bool | None = None):
+    """PartitionSpec tree for a params pytree (arrays or ShapeDtypeStructs)."""
+    fsdp = (cfg.name in FSDP_ARCHS) if fsdp is None else fsdp
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        spec = _leaf_spec(path, leaf, cfg, mesh)
+        if fsdp:
+            spec = _fsdp_augment(spec, leaf, mesh, dp)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def optimizer_shardings(param_specs: Any, params: Any, mesh):
+    """ZeRO-1: moments get FSDP sharding even when params don't."""
+    dp = dp_axes(mesh)
+
+    def one(spec, leaf):
+        return _fsdp_augment(spec, leaf, mesh, dp)
+
+    return jax.tree.map(one, param_specs, params)
+
+
+def activation_rules(cfg: ModelConfig, mesh,
+                     seq_parallel: bool = False) -> dict:
+    """Logical-name -> PartitionSpec map for models.common.shard().
+
+    ``seq_parallel``: Megatron-style sequence parallelism — the residual
+    stream between blocks is sharded on seq over 'model', turning the TP
+    all-reduces into reduce-scatter + all-gather pairs (half the traffic)
+    and shrinking remat-saved activations by the TP degree."""
+    dp = dp_axes(mesh)
+    b = dp if len(dp) > 1 else dp[0]
+    m = "model"
+    res = P(b, m, None) if seq_parallel else P(b, None, None)
+    rules = {
+        "embed": res,
+        "residual": res,
+        "ffn_hidden": P(b, None, _maybe(2 * cfg.d_ff, mesh, m)),
+        "logits": P(b, None, _maybe(cfg.vocab, mesh, m)),
+        # attention-free recurrences: width-sharded, seq-local scan
+        "rec_width": P(b, None, _maybe(cfg.rglru_width or cfg.d_model,
+                                       mesh, m)),
+    }
+    if cfg.n_heads % _axis_size(mesh, m) == 0:
+        rules["heads"] = P(b, None, m, None)
+    if cfg.moe is not None:
+        # grouped dispatch buffers [G, E, C, D]: G over data always; E over
+        # model when divisible (EP), else expert-FFN hidden TP.
+        if cfg.moe.n_experts % _axis_size(mesh, m) == 0:
+            rules["expert_buf"] = P(b, m, None, None)
+            rules["expert_hidden"] = P(b, m, None, None)
+        else:
+            rules["expert_buf"] = P(b, None, None, None)
+            rules["expert_hidden"] = P(b, None, None, m)
+        # combine reads y_buf replicated over 'model' (explicit all-gather)
+        rules["expert_out"] = P(b, None, None, None)
+    return rules
+
+
+def batch_shardings(mesh, kind: str, batch_shape_tree: Any):
+    """Input shardings: batch dim over data(+pod); everything else replicated
+    unless batch == 1 (long-context: replicate)."""
+    dp = dp_axes(mesh)
+    b = dp if len(dp) > 1 else dp[0]
+
+    def one(leaf):
+        if not hasattr(leaf, "shape") or not leaf.shape:
+            return P()
+        bdim = leaf.shape[0]
+        if bdim % _axis_size(mesh, dp) == 0:
+            return P(b, *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(one, batch_shape_tree)
+
+
+def cache_shardings(caches: Any, cfg: ModelConfig, mesh):
+    """KV/state caches: batch over data(+pod) when divisible, KV-heads/latent
+    over model when divisible."""
+    dp = dp_axes(mesh)
+    dpn = dp if len(dp) > 1 else dp[0]
+    msize = _axis_size(mesh, "model")
+
+    def one(path, leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) < 1:
+            return P()
+        names = [k.key for k in path if isinstance(k, DictKey)]
+        scanned = "main" in names
+        shape = leaf.shape[1:] if scanned else leaf.shape
+        if not shape:
+            return P()
+        parts = [None] * len(shape)
+        if shape[0] % _axis_size(mesh, dp) == 0:
+            parts[0] = dpn
+        # shard kv-head / latent / width dims over model where they divide
+        name = names[-1] if names else ""
+        if name in ("k", "v") and len(shape) == 4:
+            if shape[2] % msize == 0:
+                parts[2] = "model"          # KV heads
+            elif shape[1] % msize == 0:
+                parts[1] = "model"          # KV seq (flash-decoding style)
+            elif shape[3] % msize == 0:
+                parts[3] = "model"          # head_dim (partial-sum attention)
+        if name in ("ckv", "kpe") and len(shape) == 3:
+            # MLA latent/rope caches: shard the SEQ dim (flash-decoding) —
+            # latent-dim sharding forces a per-layer all-gather of the
+            # whole cache (see EXPERIMENTS.md §Perf minicpm3 iteration 1)
+            if shape[1] % msize == 0:
+                parts[1] = "model"
+            elif shape[2] % msize == 0:
+                parts[2] = "model"
+        if name in ("s",) and len(shape) == 4 and shape[1] % msize == 0:
+            parts[1] = "model"
+        if name in ("h", "conv", "x_prev", "chan_prev") and \
+                shape[-1] % msize == 0:
+            parts[-1] = "model"
+        if scanned:
+            parts = [None] + parts
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(one, caches)

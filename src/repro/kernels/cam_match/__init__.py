@@ -1,0 +1,4 @@
+from .ref import cam_search_ref, cam_scan_ref
+from .ops import search, scan
+
+__all__ = ["cam_search_ref", "cam_scan_ref", "search", "scan"]

@@ -1,0 +1,34 @@
+"""Jitted public wrapper for the traversal-core search CAM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .cam_match import cam_search as _pallas_search
+from .ref import cam_search_ref, cam_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "bq", "be", "interpret"))
+def search(ci: jax.Array, queries: jax.Array, backend: str = "jnp",
+           bq: int = 8, be: int = 128, interpret: bool = True):
+    """Match queries against the CSR column-index array.
+
+    Returns (match [Q, E] int8, counts [Q] int32). Pads E/Q internally; pad
+    edges use sentinel -1 (never a valid node id) so they can't match.
+    """
+    if backend == "jnp":
+        return cam_search_ref(ci, queries)
+    assert backend == "pallas", backend
+    e, = ci.shape
+    q, = queries.shape
+    pe, pq = (-e) % be, (-q) % bq
+    ci_p = jnp.pad(ci, (0, pe), constant_values=-1)
+    q_p = jnp.pad(queries, (0, pq), constant_values=-2)
+    match, counts = _pallas_search(ci_p, q_p, bq=bq, be=be,
+                                   interpret=interpret)
+    return match[:q, :e], counts[:q, 0]
+
+
+scan = cam_scan_ref  # RP scan is a searchsorted — pure jnp on all backends

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the traversal core's CAM search (IMA-GNN Fig. 3(c)-(d)).
+
+Search CAM: each query (destination node id) is matched against the CSR
+column-index array; matching rows activate. Scan CAM then resolves the source
+nodes via the row-pointer array. On the oracle side this is a broadcast
+equality compare plus a popcount, and a searchsorted over RP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cam_search_ref(ci: jax.Array, queries: jax.Array):
+    """ci: [E] int32 CSR column indices; queries: [Q] int32 node ids.
+
+    Returns (match [Q, E] int8, counts [Q] int32) — the match-line bitmap of
+    the search CAM and the per-query activation count.
+    """
+    match = (ci[None, :] == queries[:, None])
+    return match.astype(jnp.int8), match.sum(axis=1).astype(jnp.int32)
+
+
+def cam_scan_ref(rp: jax.Array, positions: jax.Array) -> jax.Array:
+    """Scan/compare: map flat edge positions to their source row via RP.
+
+    rp: [N+1] int32 row pointers; positions: [P] int32 edge positions.
+    Returns [P] int32 source node ids (the row whose [rp[r], rp[r+1]) range
+    contains the position) — the compare-CAM's increasing-reference trick.
+    """
+    return (jnp.searchsorted(rp, positions, side="right") - 1).astype(jnp.int32)

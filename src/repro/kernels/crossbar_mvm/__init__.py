@@ -1,0 +1,7 @@
+from .ref import CrossbarNumerics, crossbar_matmul_ref, crossbar_matmul_signed_ref
+from .ops import crossbar_matmul, crossbar_matmul_signed
+
+__all__ = [
+    "CrossbarNumerics", "crossbar_matmul_ref", "crossbar_matmul_signed_ref",
+    "crossbar_matmul", "crossbar_matmul_signed",
+]

@@ -1,0 +1,67 @@
+"""Jitted public wrapper around the crossbar MVM Pallas kernel.
+
+Handles global DAC/weight quantization (a full-tensor max-reduction that can
+not live inside a block-local kernel), padding to block multiples, and the
+final de-quantization rescale, so that::
+
+    crossbar_matmul(x, w, cfg)  ==  ref.crossbar_matmul_ref(x, w, cfg)
+
+bit-exactly (both compute the same integer-domain math).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .crossbar_mvm import crossbar_matmul_quantized
+from .ref import CrossbarNumerics, quantize_inputs, quantize_weights
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "bm", "bn", "interpret"))
+def crossbar_matmul(x: jax.Array, w: jax.Array,
+                    cfg: CrossbarNumerics = CrossbarNumerics(),
+                    bm: int = 128, bn: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """y = x @ w through the crossbar numerics, via the Pallas kernel.
+
+    x: [M, K] float (clipped to >= 0, as in the post-ReLU cores)
+    w: [K, N] float
+    """
+    if cfg.ideal:
+        return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    m, k = x.shape
+    _, n = w.shape
+    xq, xs = quantize_inputs(x, cfg)
+    wq, ws = quantize_weights(w, cfg)
+    xq = _pad_to(_pad_to(xq, 0, bm), 1, cfg.rows_per_xbar)
+    wq = _pad_to(_pad_to(wq, 0, cfg.rows_per_xbar), 1, bn)
+    out = crossbar_matmul_quantized(xq, wq, cfg, bm=bm, bn=bn,
+                                    interpret=interpret)
+    return out[:m, :n] * (xs * ws)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "bm", "bn", "interpret"))
+def crossbar_matmul_signed(x: jax.Array, w: jax.Array,
+                           cfg: CrossbarNumerics = CrossbarNumerics(),
+                           bm: int = 128, bn: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """Signed-activation variant (two DAC passes, digital recombine)."""
+    if cfg.ideal:
+        return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    pos = crossbar_matmul(jnp.maximum(x, 0.0), w, cfg, bm, bn, interpret)
+    neg = crossbar_matmul(jnp.maximum(-x, 0.0), w, cfg, bm, bn, interpret)
+    return pos - neg

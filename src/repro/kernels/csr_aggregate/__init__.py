@@ -1,0 +1,4 @@
+from .ref import csr_aggregate_ref, pad_neighbors
+from .ops import aggregate
+
+__all__ = ["csr_aggregate_ref", "pad_neighbors", "aggregate"]

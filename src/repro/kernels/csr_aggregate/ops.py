@@ -1,0 +1,31 @@
+"""Jitted public wrapper for the aggregation-core kernel.
+
+Pads the feature dim to the 128-lane block multiple and exposes a
+``backend`` switch: ``pallas`` (interpret-mode on CPU, compiled on TPU) or
+``jnp`` (the oracle — used on the distributed hot path where XLA's own fusion
+is preferable on a host backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .csr_aggregate import csr_aggregate as _pallas_aggregate
+from .ref import csr_aggregate_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "bf", "interpret"))
+def aggregate(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
+              backend: str = "jnp", bf: int = 128,
+              interpret: bool = True) -> jax.Array:
+    if backend == "jnp":
+        return csr_aggregate_ref(x, neighbors, weights)
+    assert backend == "pallas", backend
+    n, f = x.shape
+    pad = (-f) % bf
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    out = _pallas_aggregate(x, neighbors, weights, bf=bf, interpret=interpret)
+    return out[:, :f]

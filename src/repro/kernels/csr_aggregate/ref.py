@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the aggregation core (IMA-GNN Fig. 2(a)-3).
+
+The paper's aggregation core consumes, per destination node, the set of
+source-node rows activated by the traversal core and reduces their feature
+vectors (weighted by the edge weights from the CSR E array). Following the
+paper's Table-2 note — "a given vertex is mapped deterministically to a
+fixed-sized, uniform sample of its neighbors" — the kernel-facing format is a
+*padded neighbor sample*: for each destination node, ``sample`` slots of
+(source index, edge weight), weight 0 on padding.
+
+    z[i] = sum_s  weight[i, s] * x[neighbors[i, s]]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def csr_aggregate_ref(x: jax.Array, neighbors: jax.Array,
+                      weights: jax.Array) -> jax.Array:
+    """x: [N, F] float; neighbors: [Nd, S] int32 in [0, N); weights: [Nd, S].
+
+    Returns z: [Nd, F] float32, the weighted neighbor-feature reduction.
+    """
+    gathered = x[neighbors]                       # [Nd, S, F]
+    return jnp.einsum(
+        "nsf,ns->nf", gathered.astype(jnp.float32),
+        weights.astype(jnp.float32))
+
+
+def pad_neighbors(indptr, indices, edge_weights, sample: int,
+                  *, self_loops: bool = False):
+    """Host-side CSR -> padded neighbor sample conversion (numpy, not jitted).
+
+    Deterministic: takes the first ``sample`` neighbors of each node (the
+    paper's deterministic fixed-size uniform mapping); pads with index 0 /
+    weight 0. Returns (neighbors [N, S] int32, weights [N, S] float32).
+    """
+    import numpy as np
+    n = len(indptr) - 1
+    nbr = np.zeros((n, sample), np.int32)
+    wts = np.zeros((n, sample), np.float32)
+    for i in range(n):
+        lo, hi = int(indptr[i]), int(indptr[i + 1])
+        take = min(hi - lo, sample - (1 if self_loops else 0))
+        nbr[i, :take] = indices[lo:lo + take]
+        wts[i, :take] = (edge_weights[lo:lo + take]
+                         if edge_weights is not None else 1.0)
+        if self_loops:
+            nbr[i, take] = i
+            wts[i, take] = 1.0
+    return nbr, wts

@@ -1,0 +1,110 @@
+"""Step-function builders shared by the trainer, server, and dry-run.
+
+``make_train_step`` closes over (model, optimizer config, activation rules)
+and returns a pure (params, opt_state, batch) -> (params, opt_state, metrics)
+function. ``make_serve_step`` returns the single-token decode step.
+Activation-sharding rules are installed *around tracing* so the logical
+constraints bake into the jaxpr.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Transformer, activation_sharding
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_train_step(model: Transformer, opt_cfg: AdamWConfig,
+                    act_rules: dict | None = None, accum_steps: int = 1):
+    """``accum_steps`` > 1: microbatched gradient accumulation — the global
+    batch is split on the leading dim and scanned; one optimizer update per
+    outer step. Besides fitting bigger global batches, the per-microbatch
+    backward lets XLA overlap the DP gradient all-reduce of microbatch i
+    with the compute of microbatch i+1 (latency hiding)."""
+    rules = act_rules or {}
+
+    def grad_fn(params, batch):
+        with activation_sharding(rules):
+            return jax.value_and_grad(model.loss, has_aux=True)(params,
+                                                                batch)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, aux), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                g_sum, l_sum, lb_sum = carry
+                (l, aux), g = grad_fn(params, mb)
+                g_sum = jax.tree.map(jnp.add, g_sum, g)
+                return (g_sum, l_sum + l,
+                        lb_sum + aux.get("load_balance", 0.0)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, l_sum, lb_sum), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros(()), jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, g_sum)
+            loss = l_sum / accum_steps
+            aux = {"ce": loss, "load_balance": lb_sum / accum_steps}
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                opt_cfg)
+        metrics = {"loss": loss, "gnorm": gnorm,
+                   "ce": aux.get("ce", loss),
+                   "load_balance": aux.get("load_balance", jnp.zeros(()))}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Transformer, act_rules: dict | None = None):
+    rules = act_rules or {}
+
+    def prefill_step(params, batch):
+        with activation_sharding(rules):
+            logits, _ = model.prefill(params, batch["tokens"],
+                                      frames=batch.get("frames"),
+                                      mrope_pos=batch.get("mrope_pos"))
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(model: Transformer, act_rules: dict | None = None,
+                    with_enc: bool = False):
+    rules = act_rules or {}
+
+    if with_enc:
+        def serve_step(params, caches, token, pos_idx, enc_kvs):
+            with activation_sharding(rules):
+                logits, caches = model.decode_step(params, token, caches,
+                                                   pos_idx, enc_kvs=enc_kvs)
+            return logits, caches
+    else:
+        def serve_step(params, caches, token, pos_idx):
+            with activation_sharding(rules):
+                logits, caches = model.decode_step(params, token, caches,
+                                                   pos_idx)
+            return logits, caches
+
+    return serve_step
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Abstract train/prefill batch (ShapeDtypeStructs, no allocation)."""
+    i32 = jnp.int32
+    out = {"tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+           "labels": jax.ShapeDtypeStruct((batch, seq), i32)}
+    if cfg.is_encdec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder.n_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.mrope_sections:
+        out["mrope_pos"] = jax.ShapeDtypeStruct((3, batch, seq), i32)
+    return out

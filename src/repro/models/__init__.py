@@ -1,0 +1,9 @@
+from .config import ModelConfig, MoEConfig, MLAConfig, EncoderConfig
+from .transformer import Transformer
+from .common import activation_sharding
+
+def build(cfg: ModelConfig) -> Transformer:
+    return Transformer(cfg)
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "EncoderConfig",
+           "Transformer", "build", "activation_sharding"]

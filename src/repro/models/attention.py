@@ -1,0 +1,319 @@
+"""Attention mixers: GQA (full / sliding-window / M-RoPE) and MLA
+(DeepSeek/MiniCPM3 multi-head latent attention), with memory-bounded chunked
+prefill (online softmax over KV chunks) and single-token decode against
+KV caches (ring-buffered for sliding windows, latent-compressed for MLA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, init_dense, rms_norm, shard
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------ chunked core
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+                      chunk: int, k_valid=None, canonical: bool = False):
+    """Online-softmax attention, O(S * chunk) memory.
+
+    q: [B, Sq, H, Dk]; k: [B, Sk, KV, Dk]; v: [B, Sk, KV, Dv]
+    q_pos/k_pos: [B, Sq] / [B, Sk] absolute positions for masking.
+    KV grouping (GQA) handled by reshaping H = KV * G.
+    Returns [B, Sq, H, Dv] (f32 accumulated, cast back to q.dtype).
+
+    ``canonical``: positions are known to be arange(Sq)/arange(Sk) (train /
+    prefill). Masks are then derived from the chunk indices carried through
+    the scans (scalar + iota, [cq, ck] per step) instead of the position
+    tensors — XLA would otherwise hoist the full O(Sq*Sk) mask table out of
+    the loops and materialize it (EXPERIMENTS.md §Perf, cross-cutting fix).
+    """
+    b, sq, h, dk = q.shape
+    _, sk, kv, _ = k.shape
+    dv = v.shape[-1]
+    g = h // kv
+    scale = dk ** -0.5
+
+    cq = min(chunk, sq)
+    ck = min(chunk, sk)
+    pad_q = (-sq) % cq
+    pad_k = (-sk) % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=-1)
+        if k_valid is not None:
+            k_valid = jnp.pad(k_valid, ((0, 0), (0, pad_k)))
+    if k_valid is None:
+        k_valid = (k_pos >= 0)
+    nq, nk = (sq + pad_q) // cq, (sk + pad_k) // ck
+
+    qc = q.reshape(b, nq, cq, kv, g, dk).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(b, nk, ck, kv, dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, ck, kv, dv).transpose(1, 0, 2, 3, 4)
+    if canonical:
+        qp = jnp.arange(nq, dtype=jnp.int32)             # chunk index only
+        kp = jnp.arange(nk, dtype=jnp.int32)
+        kval = None
+    else:
+        qp = q_pos.reshape(b, nq, cq).transpose(1, 0, 2)
+        kp = k_pos.reshape(b, nk, ck).transpose(1, 0, 2)
+        kval = k_valid.reshape(b, nk, ck).transpose(1, 0, 2)
+
+    iq = jnp.arange(cq, dtype=jnp.int32)
+    ik = jnp.arange(ck, dtype=jnp.int32)
+
+    def q_step(_, qi):
+        q_i, qp_i = qi                              # [B,cq,KV,G,Dk], [B,cq]|[]
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            if canonical:
+                k_j, v_j, kj_idx = kj
+                qpos = qp_i * cq + iq                        # [cq]
+                kpos = kj_idx * ck + ik                      # [ck]
+                mask = (kpos < sk)[None, :]                  # [1, ck]
+                if causal:
+                    rel = qpos[:, None] - kpos[None, :]      # [cq, ck]
+                    mask = mask & (rel >= 0)
+                    if window:
+                        mask = mask & (rel < window)
+                mask = mask[None, :, None, None, :]          # [1,cq,1,1,ck]
+            else:
+                k_j, v_j, kp_j, kv_j = kj
+                mask = kv_j[:, None, None, None, :]
+                if causal:
+                    rel = qp_i[:, :, None, None, None] \
+                        - kp_j[:, None, None, None, :]
+                    mask = mask & (rel >= 0)
+                    if window:
+                        mask = mask & (rel < window)
+            s = jnp.einsum("bqkgd,bckd->bqkgc", q_i.astype(jnp.float32),
+                           k_j.astype(jnp.float32)) * scale
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p, v_j.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, cq, kv, g), NEG_INF, jnp.float32),
+                jnp.zeros((b, cq, kv, g), jnp.float32),
+                jnp.zeros((b, cq, kv, g, dv), jnp.float32))
+        kxs = (kc, vc, kp) if canonical else (kc, vc, kp, kval)
+        # flash-attention backward: recompute scores/probs per chunk pair in
+        # reverse-mode instead of saving the O(Sq*Sk) probability tensor
+        # (EXPERIMENTS.md §Perf, cross-cutting iteration)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step, prevent_cse=False), init, kxs)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out
+
+    _, out = jax.lax.scan(q_step, None, (qc, qp))   # [nq, B, cq, KV, G, Dv]
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * cq, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ------------------------------------------------------------ GQA
+def init_gqa(key, cfg: ModelConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    ks = jax.random.split(key, 4)
+    return {"wq": init_dense(ks[0], (d, h * dh), dtype=cfg.dtype),
+            "wk": init_dense(ks[1], (d, kv * dh), dtype=cfg.dtype),
+            "wv": init_dense(ks[2], (d, kv * dh), dtype=cfg.dtype),
+            "wo": init_dense(ks[3], (h * dh, d), dtype=cfg.dtype)}
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, capacity: int,
+                   window: int) -> dict:
+    cap = min(capacity, window) if window else capacity
+    kv, dh = cfg.n_kv_heads, cfg.dh
+    dt = jnp.dtype(cfg.dtype)
+    return {"k": jnp.zeros((batch, cap, kv, dh), dt),
+            "v": jnp.zeros((batch, cap, kv, dh), dt),
+            "pos": jnp.full((batch, cap), -1, jnp.int32),
+            "idx": jnp.zeros((), jnp.int32)}
+
+
+def gqa_attention(params, x, pos, cfg: ModelConfig, *, window: int,
+                  cache: dict | None = None, mrope_pos=None):
+    """x: [B, S, D]. Prefill/train when cache is None (returns out only);
+    decode when cache is given (S == 1; returns out, new_cache)."""
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(b, s, kv, dh)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(b, s, kv, dh)
+    rp = mrope_pos if mrope_pos is not None else pos
+    q = apply_rope(q, rp, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, rp, cfg.rope_theta, cfg.mrope_sections)
+    q = shard(q, "heads")
+
+    if cache is None:
+        out = chunked_attention(q, k, v, pos, pos, causal=True,
+                                window=window, chunk=cfg.attn_chunk,
+                                canonical=True)
+    else:
+        cap = cache["k"].shape[1]
+        slot = cache["idx"] % cap
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(cache["pos"], pos, (0, slot))
+        valid = cpos >= 0
+        if window:
+            valid = valid & (pos[:, :1] - cpos < window)
+        g = h // kv
+        qg = q.reshape(b, s, kv, g, dh).astype(jnp.float32)
+        s_ = jnp.einsum("bqkgd,bckd->bqkgc", qg,
+                        ck.astype(jnp.float32)) * (dh ** -0.5)
+        s_ = jnp.where(valid[:, None, None, None, :], s_, NEG_INF)
+        p = jax.nn.softmax(s_, axis=-1)
+        out = jnp.einsum("bqkgc,bckd->bqkgd", p, cv.astype(jnp.float32))
+        out = out.reshape(b, s, h, dh).astype(x.dtype)
+        cache = {"k": ck, "v": cv, "pos": cpos, "idx": cache["idx"] + s}
+
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, h * dh), params["wo"])
+    y = shard(y, "residual")
+    return (y, cache) if cache is not None else y
+
+
+# ------------------------------------------------------------ MLA
+def init_mla(key, cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    p = {"wdkv": init_dense(ks[0], (d, m.kv_lora + m.rope_dim), dtype=cfg.dtype),
+         "kv_norm": jnp.zeros((m.kv_lora,), jnp.float32),
+         "wukv": init_dense(ks[1], (m.kv_lora, h * (m.nope_dim + m.v_dim)),
+                            dtype=cfg.dtype),
+         "wo": init_dense(ks[2], (h * m.v_dim, d), dtype=cfg.dtype)}
+    if m.q_lora:
+        p["wdq"] = init_dense(ks[3], (d, m.q_lora), dtype=cfg.dtype)
+        p["q_norm"] = jnp.zeros((m.q_lora,), jnp.float32)
+        p["wuq"] = init_dense(ks[4], (m.q_lora, h * (m.nope_dim + m.rope_dim)),
+                              dtype=cfg.dtype)
+    else:
+        p["wuq"] = init_dense(ks[4], (d, h * (m.nope_dim + m.rope_dim)),
+                              dtype=cfg.dtype)
+    return p
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    m = cfg.mla
+    dt = jnp.dtype(cfg.dtype)
+    return {"ckv": jnp.zeros((batch, capacity, m.kv_lora), dt),
+            "kpe": jnp.zeros((batch, capacity, m.rope_dim), dt),
+            "pos": jnp.full((batch, capacity), -1, jnp.int32),
+            "idx": jnp.zeros((), jnp.int32)}
+
+
+def _mla_q(params, x, pos, cfg):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if m.q_lora:
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["wdq"]),
+                      params["q_norm"], cfg.norm_eps)
+    else:
+        cq = x
+    q = jnp.einsum("bsr,re->bse", cq, params["wuq"]).reshape(
+        b, s, h, m.nope_dim + m.rope_dim)
+    q_nope, q_pe = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    q_pe = apply_rope(q_pe, pos, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def mla_attention(params, x, pos, cfg: ModelConfig,
+                  cache: dict | None = None):
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    q_nope, q_pe = _mla_q(params, x, pos, cfg)
+    dkv = jnp.einsum("bsd,dr->bsr", x, params["wdkv"])
+    ckv_new, kpe_new = dkv[..., :m.kv_lora], dkv[..., m.kv_lora:]
+    kpe_new = apply_rope(kpe_new[:, :, None, :], pos, cfg.rope_theta)[:, :, 0]
+
+    if cache is None:
+        # prefill: reconstruct per-head keys/values from the latent
+        kvu = jnp.einsum("bsr,re->bse",
+                         rms_norm(ckv_new, params["kv_norm"], cfg.norm_eps),
+                         params["wukv"]).reshape(b, s, h, m.nope_dim + m.v_dim)
+        k_nope, v = kvu[..., :m.nope_dim], kvu[..., m.nope_dim:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kpe_new[:, :, None, :],
+                                      (b, s, h, m.rope_dim))], axis=-1)
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = chunked_attention(q, k, v, pos, pos, causal=True, window=0,
+                                chunk=cfg.attn_chunk, canonical=True)
+        y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, h * m.v_dim),
+                       params["wo"])
+        return shard(y, "residual")
+
+    # decode: absorbed attention in latent space (cache = latent + rope key).
+    # The cache stores the POST-kv_norm latent: rms_norm is per-position, so
+    # normalizing once at insertion is exact and avoids re-normalizing (and
+    # materializing in f32) the whole cache every step — see EXPERIMENTS.md
+    # §Perf minicpm3 iteration 2. Score/value dots run on bf16 operands with
+    # f32 accumulation (flash-decoding numerics).
+    f32 = jnp.float32
+    cap = cache["ckv"].shape[1]
+    slot = cache["idx"] % cap
+    ckv_new_n = rms_norm(ckv_new, params["kv_norm"], cfg.norm_eps)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new_n, (0, slot, 0))
+    kpe = jax.lax.dynamic_update_slice(cache["kpe"], kpe_new, (0, slot, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos, (0, slot))
+    wukv = params["wukv"].reshape(m.kv_lora, h, m.nope_dim + m.v_dim)
+    w_uk, w_uv = wukv[..., :m.nope_dim], wukv[..., m.nope_dim:]
+    # absorb: q_lat[b,s,h,r] = q_nope . w_uk^T
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk,
+                       preferred_element_type=f32)
+    scores = jnp.einsum("bshr,bcr->bshc", q_lat.astype(x.dtype), ckv,
+                        preferred_element_type=f32) \
+        + jnp.einsum("bshp,bcp->bshc", q_pe.astype(x.dtype), kpe,
+                     preferred_element_type=f32)
+    scores = scores * ((m.nope_dim + m.rope_dim) ** -0.5)
+    scores = jnp.where((cpos >= 0)[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bshc,bcr->bshr", p.astype(x.dtype), ckv,
+                         preferred_element_type=f32)
+    out = jnp.einsum("bshr,rhv->bshv", out_lat.astype(x.dtype), w_uv,
+                     preferred_element_type=f32)
+    y = jnp.einsum("bse,ed->bsd",
+                   out.reshape(b, s, h * m.v_dim).astype(x.dtype),
+                   params["wo"])
+    new_cache = {"ckv": ckv, "kpe": kpe, "pos": cpos, "idx": cache["idx"] + s}
+    return shard(y, "residual"), new_cache
+
+
+# ------------------------------------------------------------ cross-attn
+def init_cross(key, cfg: ModelConfig) -> dict:
+    return init_gqa(key, cfg)
+
+
+def cross_attention(params, x, enc_kv, cfg: ModelConfig):
+    """x: [B, S, D] decoder; enc_kv: (k, v) each [B, T, KV, Dh] precomputed."""
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, s, h, dh)
+    k, v = enc_kv
+    t = k.shape[1]
+    pos_q = jnp.zeros((b, s), jnp.int32)
+    pos_k = jnp.zeros((b, t), jnp.int32)
+    out = chunked_attention(q, k, v, pos_q, pos_k, causal=False, window=0,
+                            chunk=cfg.attn_chunk, canonical=True)
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, h * dh), params["wo"])
+
+
+def encode_cross_kv(params, enc_out, cfg: ModelConfig):
+    b, t, d = enc_out.shape
+    kv, dh = cfg.n_kv_heads, cfg.dh
+    k = jnp.einsum("btd,de->bte", enc_out, params["wk"]).reshape(b, t, kv, dh)
+    v = jnp.einsum("btd,de->bte", enc_out, params["wv"]).reshape(b, t, kv, dh)
+    return k, v

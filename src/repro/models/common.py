@@ -1,0 +1,129 @@
+"""Shared building blocks: norms, RoPE/M-RoPE, FFNs, init, sharding hooks."""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+# ---------------------------------------------------------------- sharding
+# Logical activation-sharding hooks. launch/ installs a {name: PartitionSpec}
+# map; inside the model we tag activations by logical name. With no map
+# installed (unit tests, single device) this is a no-op.
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: dict):
+    old = getattr(_CTX, "rules", None)
+    _CTX.rules = rules
+    try:
+        yield
+    finally:
+        _CTX.rules = old
+
+
+def shard(x: jax.Array, name: str) -> jax.Array:
+    rules = getattr(_CTX, "rules", None)
+    if rules and name in rules:
+        return jax.lax.with_sharding_constraint(x, rules[name])
+    return x
+
+
+# ---------------------------------------------------------------- numerics
+def cast(x, cfg: ModelConfig):
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_dense(key, shape, scale: float | None = None, dtype="bfloat16"):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(dh: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float,
+               sections: tuple = ()) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, Dh]; pos: [B, S] or [3, B, S] (M-RoPE).
+
+    With ``sections`` (qwen2-vl M-RoPE), the Dh/2 frequency pairs are split
+    into len(sections) groups, group g rotating by pos[g] (temporal/height/
+    width axes). Text-only inputs pass identical pos per group.
+    """
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    if sections:
+        assert sum(sections) == dh // 2, (sections, dh)
+        assert pos.ndim == 3, "M-RoPE needs pos [3, B, S]"
+        parts = []
+        start = 0
+        for g, sec in enumerate(sections):
+            f = freqs[start:start + sec]
+            parts.append(pos[g].astype(jnp.float32)[..., None] * f)
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)        # [B, S, Dh/2]
+    else:
+        if pos.ndim == 3:
+            pos = pos[0]
+        angles = pos.astype(jnp.float32)[..., None] * freqs
+    cos = jnp.cos(angles)[..., None, :]                 # [B, S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- FFN
+def init_ffn(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    if cfg.act == "swiglu":
+        return {"wi": init_dense(k1, (d, 2 * f), dtype=cfg.dtype),
+                "wo": init_dense(k2, (f, d), dtype=cfg.dtype)}
+    return {"wi": init_dense(k1, (d, f), dtype=cfg.dtype),
+            "wo": init_dense(k2, (f, d), dtype=cfg.dtype)}
+
+
+def ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    if cfg.act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "ffn_hidden")
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# ---------------------------------------------------------------- embedding
+def init_embed(key, cfg: ModelConfig) -> dict:
+    p = {"tok": init_dense(key, (cfg.vocab, cfg.d_model), scale=1.0,
+                           dtype=cfg.dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = init_dense(jax.random.fold_in(key, 1),
+                               (cfg.d_model, cfg.vocab), dtype=cfg.dtype)
+    return p
+
+
+def embed(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return shard(params["tok"][tokens], "embed")
+
+
+def unembed(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = params["tok"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    return shard(logits, "logits")

@@ -1,0 +1,145 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+The dispatch is deliberately built on the IMA-GNN aggregation dataflow
+(DESIGN.md §Arch-applicability): token->expert routing is a sparse
+gather-reduce exactly like neighbor aggregation — router top-k plays the role
+of the traversal core's edge list, the expert buffers are the "clusters", and
+the weighted combine is the aggregation core's reduction. Expert-parallel
+sharding places the [E, C, D] buffers on the 'model' axis (or the expert FFN
+hidden dim when E < axis size), with GSPMD inserting the all-to-alls.
+
+Dispatch algorithm (fixed shapes, jit/SPMD-friendly):
+  1. router logits -> top-k expert ids + gates per token,
+  2. stable-sort token-slots by expert id,
+  3. rank-within-expert via sorted-position - expert-start (capacity drop),
+  4. scatter tokens into [E, C, D]; batched expert matmul; weighted combine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import init_dense, shard
+from .config import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    mo = cfg.moe
+    d, f, e = cfg.d_model, mo.d_ff_expert, mo.n_experts
+    ks = jax.random.split(key, 5)
+    p = {"router": init_dense(ks[0], (d, e), dtype="float32"),
+         "wi": init_dense(ks[1], (e, d, 2 * f), dtype=cfg.dtype),
+         "wo": init_dense(ks[2], (e, f, d), dtype=cfg.dtype)}
+    if mo.n_shared:
+        fs = f * mo.n_shared
+        p["shared_wi"] = init_dense(ks[3], (d, 2 * fs), dtype=cfg.dtype)
+        p["shared_wo"] = init_dense(ks[4], (fs, d), dtype=cfg.dtype)
+    return p
+
+
+def _route(params, x2d, cfg: ModelConfig):
+    """Router: returns (expert_ids [T, k], gates [T, k])."""
+    mo = cfg.moe
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        params["router"])
+    if mo.router == "sigmoid":           # deepseek-v3 style
+        scores = jax.nn.sigmoid(logits)
+        gates, ids = jax.lax.top_k(scores, mo.top_k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    else:                                # grok/softmax style
+        gates, ids = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), mo.top_k)
+    return ids.astype(jnp.int32), gates
+
+
+def _group_dispatch(x_g, ids_g, e: int, cap: int):
+    """Sort-based dispatch WITHIN one token group. x_g: [S, D];
+    ids_g: [S, k]. Returns (buf [E, cap, D], slot maps).
+
+    The buffer is built with a GATHER over the sort order (buf[e, c] =
+    x[token of the c-th slot routed to e]) rather than a scatter: GSPMD
+    partitions gathers on the output dims, so an expert-sharded buffer is
+    produced locally per shard with no all-reduce (EXPERIMENTS.md §Perf
+    deepseek iteration 2). Combine needs no scatter either — a token's k
+    slots are contiguous in flat order, so it is a gather + reshape + sum."""
+    s, d = x_g.shape
+    k = ids_g.shape[-1]
+    flat_ids = ids_g.reshape(-1)                         # [S*k]
+    order = jnp.argsort(flat_ids, stable=True)           # sorted slot order
+    sorted_ids = flat_ids[order]
+    starts = jnp.searchsorted(sorted_ids, jnp.arange(e), side="left")
+    ends = jnp.searchsorted(sorted_ids, jnp.arange(e), side="right")
+    # buf[e, c] = x_g[token of sorted slot starts[e] + c]
+    pos = starts[:, None] + jnp.arange(cap)[None, :]     # [E, C]
+    valid = pos < ends[:, None]
+    slot = order[jnp.clip(pos, 0, s * k - 1)]            # original slot id
+    token = slot // k                                    # [E, C]
+    buf = jnp.where(valid[:, :, None], x_g[token], 0)    # gather
+    # combine maps: rank of every slot within its expert (inverse perm)
+    inv = jnp.zeros((s * k,), jnp.int32).at[order].set(
+        jnp.arange(s * k, dtype=jnp.int32))
+    rank = inv - starts[flat_ids]
+    keep = rank < cap
+    return buf, (flat_ids, rank, keep)
+
+
+def moe_ffn(params, x, cfg: ModelConfig):
+    """x: [B, S, D] -> [B, S, D]. Returns (out, aux) with load-balance stats.
+
+    GShard-style grouped dispatch: each batch row is a dispatch group, so
+    the [G, E, C, D] buffer shards over BOTH the data axis (G) and the
+    model axis (E) — no device ever materializes the global buffer, and
+    GSPMD lowers the group->expert reshard to an all-to-all (the paper's
+    decentralized cluster->cluster edge traffic, here token->expert)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = mo.top_k
+    e = mo.n_experts
+    x2d = x.reshape(t, d)
+    ids, gates = _route(params, x2d, cfg)                # [T, k]
+
+    cap = int(mo.capacity_factor * s * k / e) + 1        # per-group capacity
+    ids_g = ids.reshape(b, s, k)
+    gates_g = gates.reshape(b, s, k)
+    x_g = x                                              # [B(G), S, D]
+    buf, (slot_e, rank, keep) = jax.vmap(
+        _group_dispatch, in_axes=(0, 0, None, None))(x_g, ids_g, e, cap)
+    buf = shard(buf, "expert_buf")                       # [G, E, C, D]
+
+    # ---- expert compute (batched swiglu; E model-sharded, G data-sharded)
+    h = jnp.einsum("gecd,edf->gecf", buf, params["wi"])
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    h = shard(h, "expert_hidden")
+    y_buf = jnp.einsum("gecf,efd->gecd", h, params["wo"])
+    # replicate expert outputs over 'model' BEFORE the combine gather: one
+    # bf16 all-gather instead of GSPMD's masked-partial-gather + f32
+    # all-reduce of the [S*k, D] combine tensor (2x the traffic)
+    y_buf = shard(y_buf, "expert_out")
+
+    # ---- weighted combine back to tokens (gather + reshape-sum over k) ----
+    def _combine(y_g, slot_e_g, rank_g, keep_g, gates_one):
+        got = y_g[slot_e_g, jnp.clip(rank_g, 0, cap - 1)]   # [S*k, D]
+        w = jnp.where(keep_g, gates_one.reshape(-1), 0.0)
+        got = got * w[:, None].astype(got.dtype)            # bf16 slot space
+        return got.reshape(s, k, d).sum(axis=1,
+                                        dtype=jnp.float32)  # f32 k-reduce
+
+    out = jax.vmap(_combine)(y_buf, slot_e, rank, keep, gates_g)
+    out = out.reshape(t, d).astype(x.dtype)
+    flat_ids = ids.reshape(-1)
+    keep_frac = keep.reshape(-1).mean()
+
+    if mo.n_shared:
+        hs = jnp.einsum("td,df->tf", x2d, params["shared_wi"])
+        sg, su = jnp.split(hs, 2, axis=-1)
+        hs = jax.nn.silu(sg.astype(jnp.float32)).astype(x.dtype) * su
+        out = out + jnp.einsum("tf,fd->td", hs, params["shared_wo"])
+
+    # aux: load-balance loss terms (mean gate fraction x token fraction)
+    me = jnp.zeros((e,), jnp.float32).at[flat_ids].add(1.0) / (t * k)
+    pe = jnp.zeros((e,), jnp.float32).at[ids[:, 0]].add(
+        gates[:, 0].astype(jnp.float32)) / t
+    aux = {"load_balance": e * jnp.sum(me * pe),
+           "dropped_frac": 1.0 - keep_frac}
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,228 @@
+"""Attention-free mixers: RG-LRU (RecurrentGemma) and RWKV-6 "Finch".
+
+Both expose the same interface as the attention mixers:
+  * full-sequence mode (train/prefill) via lax.scan over time,
+  * single-step decode against a small recurrent state (their "KV cache"),
+so ``long_500k`` decode is O(1) in sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import init_dense, shard
+from .config import ModelConfig
+
+
+# ================================================================ RG-LRU
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": init_dense(ks[0], (d, 2 * w), dtype=cfg.dtype),  # rnn + gate br.
+        "conv": init_dense(ks[1], (4, w), scale=0.5, dtype=cfg.dtype),
+        "w_a": init_dense(ks[2], (w, w), dtype=cfg.dtype),     # recurrence gate
+        "w_i": init_dense(ks[3], (w, w), dtype=cfg.dtype),     # input gate
+        # Lambda parameterized so a = exp(-8*softplus(lam)*sigmoid(.)) starts
+        # near long memory
+        "lam": jnp.full((w,), 0.5, jnp.float32),
+        "wo": init_dense(ks[4], (w, d), dtype=cfg.dtype),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.rglru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, 4, w), jnp.float32)}
+
+
+_C = 8.0
+
+
+def _rglru_gates(params, x):
+    """Per-timestep gate terms of the RG-LRU recurrence. x: [..., W] f32
+    (post-conv). Returns (a, gated) with h_t = a_t * h_{t-1} + gated_t.
+
+    All dots live HERE — outside the time recurrence — so TP weight-gradient
+    all-reduces happen once per call, not once per timestep (EXPERIMENTS.md
+    §Perf recurrentgemma iteration 1)."""
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x,
+                                  params["w_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x,
+                                  params["w_i"].astype(jnp.float32)))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i * x)
+    return a, gated
+
+
+def _rglru_step(params, h, x_t):
+    """One RG-LRU decode step. x_t: [B, W] (post-conv); h: [B, W]."""
+    a, gated = _rglru_gates(params, x_t)
+    return a * h + gated
+
+
+def rglru_mixer(params, x, cfg: ModelConfig, state: dict | None = None):
+    """x: [B, S, D]. Full-sequence when state is None; else one decode step."""
+    b, s, d = x.shape
+    w = cfg.rglru_width or d
+    xb = jnp.einsum("bsd,dw->bsw", x, params["wx"])
+    rnn_in, gate = jnp.split(xb, 2, axis=-1)
+    rnn_in = rnn_in.astype(jnp.float32)
+
+    if state is None:
+        # temporal conv (width 4, causal) over the rnn branch
+        pad = jnp.pad(rnn_in, ((0, 0), (3, 0), (0, 0)))
+        conv = sum(pad[:, i:i + s] * params["conv"][i].astype(jnp.float32)
+                   for i in range(4))
+        # purely elementwise linear recurrence h_t = a_t h_{t-1} + g_t,
+        # evaluated with a log-depth associative scan (parallel over time on
+        # TPU instead of a 4096-long sequential loop). (An explicit width-
+        # sharding tag was tried and REFUTED — see EXPERIMENTS.md §Perf
+        # recurrentgemma iteration 3.)
+        a, g = _rglru_gates(params, conv)               # [B, S, W]
+
+        def comb(lhs, rhs):
+            a1, g1 = lhs
+            a2, g2 = rhs
+            return a1 * a2, g2 + a2 * g1
+
+        _, hs = jax.lax.associative_scan(comb, (a, g), axis=1)
+        y = hs                                          # [B, S, W]
+        new_state = None
+    else:
+        # decode: roll the conv window, one recurrence step
+        win = jnp.concatenate([state["conv"][:, 1:], rnn_in], axis=1)
+        conv_t = jnp.einsum("bkw,kw->bw", win,
+                            params["conv"].astype(jnp.float32))
+        h = _rglru_step(params, state["h"], conv_t)
+        y = h[:, None, :]
+        new_state = {"h": h, "conv": win}
+
+    out = y.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", out, params["wo"])
+    return (out, new_state) if state is not None else out
+
+
+# ================================================================ RWKV-6
+def init_rwkv(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    ks = jax.random.split(key, 10)
+    return {
+        # data-dependent token-shift mix coefficients (Finch ddlerp, shared
+        # low-rank path simplified to per-channel mu + one lora)
+        "mu": init_dense(ks[0], (5, d), scale=0.5, dtype="float32"),
+        "w1": init_dense(ks[1], (d, 64), dtype=cfg.dtype),
+        "w2": init_dense(ks[2], (64, d), dtype=cfg.dtype),
+        "decay_base": jnp.full((d,), -2.0, jnp.float32),
+        "u": init_dense(ks[3], (d,), scale=0.5, dtype="float32"),  # bonus
+        "wr": init_dense(ks[4], (d, d), dtype=cfg.dtype),
+        "wk": init_dense(ks[5], (d, d), dtype=cfg.dtype),
+        "wv": init_dense(ks[6], (d, d), dtype=cfg.dtype),
+        "wg": init_dense(ks[7], (d, d), dtype=cfg.dtype),
+        "wo": init_dense(ks[8], (d, d), dtype=cfg.dtype),
+        "ln_x": jnp.ones((d,), jnp.float32),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    h = d // dh
+    return {"s": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "x_prev": jnp.zeros((batch, d), jnp.float32)}
+
+
+def _rwkv_inner(params, r, k, v, w, u, s0):
+    """Finch recurrence over time. r,k,v,w: [B, S, H, Dh] (f32); s0:[B,H,Dh,Dh].
+
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                        # [B, H, Dh]
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s                  # [B, S, H, Dh]
+
+
+def rwkv_mixer(params, x, cfg: ModelConfig, state: dict | None = None):
+    """RWKV-6 time-mix. x: [B, S, D]."""
+    b, s, d = x.shape
+    dh = cfg.rwkv_head_dim
+    h = d // dh
+    xf = x.astype(jnp.float32)
+    if state is None:
+        x_prev = jnp.pad(xf, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev = state["x_prev"][:, None, :]
+    delta = x_prev - xf
+    mu = params["mu"].astype(jnp.float32)
+    # data-dependent shift amount (shared lora across the five mixes)
+    dd = jnp.tanh(jnp.einsum("bsd,dr->bsr", xf, params["w1"].astype(jnp.float32)))
+    dd = jnp.einsum("bsr,rd->bsd", dd, params["w2"].astype(jnp.float32))
+    mix = lambda i: xf + delta * jax.nn.sigmoid(mu[i] + dd)
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+
+    r = jnp.einsum("bsd,de->bse", xr, params["wr"].astype(jnp.float32))
+    k = jnp.einsum("bsd,de->bse", xk, params["wk"].astype(jnp.float32))
+    v = jnp.einsum("bsd,de->bse", xv, params["wv"].astype(jnp.float32))
+    g = jnp.einsum("bsd,de->bse", xg, params["wg"].astype(jnp.float32))
+    # data-dependent decay (the Finch signature): w in (0,1)
+    w = jnp.exp(-jnp.exp(params["decay_base"] + xw))
+
+    hd = lambda a: a.reshape(b, s, h, dh)
+    u = params["u"].astype(jnp.float32).reshape(h, dh)
+    s0 = (state["s"] if state is not None
+          else jnp.zeros((b, h, dh, dh), jnp.float32))
+    y, s_new = _rwkv_inner(params, hd(r), hd(k), hd(v), hd(w), u, s0)
+    y = y.reshape(b, s, d)
+    # group-norm per head (ln_x), then output gate
+    yh = y.reshape(b, s, h, dh)
+    yh = (yh - yh.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        yh.var(-1, keepdims=True) + 1e-5)
+    y = yh.reshape(b, s, d) * params["ln_x"]
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", y.astype(x.dtype), params["wo"])
+    if state is not None:
+        return out, {"s": s_new, "x_prev": xf[:, -1]}
+    return out
+
+
+def init_rwkv_channel(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {"mu_k": init_dense(ks[0], (d,), scale=0.5, dtype="float32"),
+            "mu_r": init_dense(ks[1], (d,), scale=0.5, dtype="float32"),
+            "wk": init_dense(ks[2], (d, f), dtype=cfg.dtype),
+            "wv": init_dense(ks[3], (f, d), dtype=cfg.dtype),
+            "wr": init_dense(jax.random.fold_in(key, 9), (d, d),
+                             dtype=cfg.dtype)}
+
+
+def rwkv_channel_mix(params, x, cfg: ModelConfig,
+                     x_prev: jax.Array | None = None):
+    """RWKV channel-mix ("FFN") with token shift. x: [B, S, D]."""
+    xf = x.astype(jnp.float32)
+    if x_prev is None:
+        prev = jnp.pad(xf, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = x_prev[:, None, :]
+    delta = prev - xf
+    xk = xf + delta * jax.nn.sigmoid(params["mu_k"])
+    xr = xf + delta * jax.nn.sigmoid(params["mu_r"])
+    kk = jnp.einsum("bsd,df->bsf", xk.astype(x.dtype), params["wk"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = jnp.einsum("bsf,fd->bsd", kk, params["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                   params["wr"].astype(jnp.float32)))
+    out = rr.astype(x.dtype) * vv
+    if x_prev is not None:
+        return out, xf[:, -1]
+    return out

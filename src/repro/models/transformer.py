@@ -1,0 +1,422 @@
+"""Unified decoder substrate: every assigned architecture is an instance.
+
+Layer stack = [prelude] + scan(cycles of cfg.pattern) + [tail]:
+  * prelude — leading dense-FFN layers (deepseek-v3's first 3),
+  * cycles  — lax.scan over stacked parameters (compile-time O(1) in depth),
+  * tail    — remainder when n_layers % len(pattern) != 0.
+
+Pre-norm residual blocks; mixer dispatch by pattern entry ('attn' | 'local' |
+'rglru' | 'rwkv'); FFN = dense SwiGLU/GELU, MoE, or RWKV channel-mix.
+Encoder-decoder (whisper) adds a bidirectional encoder + per-layer
+cross-attention. Decode carries per-layer caches (KV / latent / recurrent
+state). Cross-entropy is chunked over the sequence so the [B, S, V] logits
+tensor is never materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_lib
+from . import recurrent as rec
+from .common import embed, ffn, init_dense, init_embed, init_ffn, rms_norm, shard, unembed
+from .config import ModelConfig
+
+
+# ================================================================ layers
+def _layer_kinds(cfg: ModelConfig):
+    """(prelude_kinds, cycle_pattern, n_cycles, tail_kinds)."""
+    n_prelude = cfg.moe.n_dense_layers if cfg.moe else 0
+    prelude = tuple(cfg.pattern[i % len(cfg.pattern)]
+                    for i in range(n_prelude))
+    rest = cfg.n_layers - n_prelude
+    if cfg.is_encdec or not cfg.scan_layers:
+        # enc-dec (whisper, 6 layers) unrolls: per-layer cross-KV wiring
+        return prelude, cfg.pattern, 0, tuple(
+            cfg.pattern[i % len(cfg.pattern)] for i in range(rest))
+    n_cycles = rest // len(cfg.pattern)
+    tail = tuple(cfg.pattern[i % len(cfg.pattern)]
+                 for i in range(rest - n_cycles * len(cfg.pattern)))
+    return prelude, cfg.pattern, n_cycles, tail
+
+
+def _init_mixer(key, kind: str, cfg: ModelConfig) -> dict:
+    if kind in ("attn", "local"):
+        return attn.init_mla(key, cfg) if cfg.mla else attn.init_gqa(key, cfg)
+    if kind == "rglru":
+        return rec.init_rglru(key, cfg)
+    if kind == "rwkv":
+        return rec.init_rwkv(key, cfg)
+    raise ValueError(kind)
+
+
+def _init_block(key, kind: str, cfg: ModelConfig, use_moe: bool) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {"ln1": jnp.zeros((d,), jnp.float32),
+         "ln2": jnp.zeros((d,), jnp.float32),
+         "mixer": _init_mixer(ks[0], kind, cfg)}
+    if kind == "rwkv":
+        p["ffn"] = rec.init_rwkv_channel(ks[1], cfg)
+    elif use_moe:
+        p["ffn"] = moe_lib.init_moe(ks[1], cfg)
+    else:
+        d_ff = (cfg.moe.d_ff_dense or cfg.d_ff) if (
+            cfg.moe and cfg.moe.n_dense_layers) else cfg.d_ff
+        p["ffn"] = init_ffn(ks[1], cfg, d_ff)
+    if cfg.is_encdec:
+        p["ln_x"] = jnp.zeros((d,), jnp.float32)
+        p["cross"] = attn.init_cross(ks[2], cfg)
+    return p
+
+
+def _init_cache(kind: str, cfg: ModelConfig, batch: int, capacity: int):
+    if kind == "attn":
+        if cfg.mla:
+            return attn.init_mla_cache(cfg, batch, capacity)
+        return attn.init_gqa_cache(cfg, batch, capacity, cfg.window)
+    if kind == "local":
+        return attn.init_gqa_cache(cfg, batch, capacity, cfg.local_window)
+    if kind == "rglru":
+        return rec.init_rglru_state(cfg, batch)
+    if kind == "rwkv":
+        st = rec.init_rwkv_state(cfg, batch)
+        st["chan_prev"] = jnp.zeros((batch, cfg.d_model), jnp.float32)
+        return st
+    raise ValueError(kind)
+
+
+def _apply_block(params, x, pos, kind: str, cfg: ModelConfig, use_moe: bool,
+                 cache=None, enc_kv=None, mrope_pos=None):
+    """Returns (x, new_cache, aux)."""
+    aux = {}
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    new_cache = None
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "attn" else cfg.local_window
+        if cfg.mla:
+            r = attn.mla_attention(params["mixer"], h, pos, cfg, cache=cache)
+        else:
+            r = attn.gqa_attention(params["mixer"], h, pos, cfg,
+                                   window=window, cache=cache,
+                                   mrope_pos=mrope_pos)
+        if cache is not None:
+            r, new_cache = r
+    elif kind == "rglru":
+        r = rec.rglru_mixer(params["mixer"], h, cfg, state=cache)
+        if cache is not None:
+            r, new_cache = r
+    else:  # rwkv
+        if cache is not None:
+            r, st = rec.rwkv_mixer(params["mixer"], h, cfg,
+                                   state={"s": cache["s"],
+                                          "x_prev": cache["x_prev"]})
+            new_cache = dict(cache, **st)
+        else:
+            r = rec.rwkv_mixer(params["mixer"], h, cfg)
+    x = x + r
+    if cfg.is_encdec and enc_kv is not None:
+        hx = rms_norm(x, params["ln_x"], cfg.norm_eps)
+        x = x + attn.cross_attention(params["cross"], hx, enc_kv, cfg)
+    h2 = rms_norm(x, params["ln2"], cfg.norm_eps)
+    if kind == "rwkv":
+        if cache is not None:
+            f, chan_prev = rec.rwkv_channel_mix(params["ffn"], h2, cfg,
+                                                x_prev=cache["chan_prev"])
+            new_cache["chan_prev"] = chan_prev
+        else:
+            f = rec.rwkv_channel_mix(params["ffn"], h2, cfg)
+    elif use_moe:
+        f, aux = moe_lib.moe_ffn(params["ffn"], h2, cfg)
+    else:
+        f = ffn(params["ffn"], h2, cfg)
+    return x + f, new_cache, aux
+
+
+# ================================================================ model
+@dataclasses.dataclass(frozen=True)
+class Transformer:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        prelude, pattern, n_cycles, tail = _layer_kinds(cfg)
+        keys = jax.random.split(key, 8)
+        params = {"embed": init_embed(keys[0], cfg),
+                  "final_ln": jnp.zeros((cfg.d_model,), jnp.float32)}
+        params["prelude"] = [
+            _init_block(jax.random.fold_in(keys[1], i), k, cfg, use_moe=False)
+            for i, k in enumerate(prelude)]
+
+        def cycle_init(ck):
+            return {f"sub{j}": _init_block(jax.random.fold_in(ck, j), kind,
+                                           cfg, use_moe=cfg.moe is not None)
+                    for j, kind in enumerate(pattern)}
+        if n_cycles:
+            params["main"] = jax.vmap(cycle_init)(
+                jax.random.split(keys[2], n_cycles))
+        params["tail"] = [
+            _init_block(jax.random.fold_in(keys[3], i), k, cfg,
+                        use_moe=cfg.moe is not None)
+            for i, k in enumerate(tail)]
+        if cfg.is_encdec:
+            enc = cfg.encoder
+            params["enc"] = {
+                "blocks": [_init_block(jax.random.fold_in(keys[4], i), "attn",
+                                       dataclasses.replace(cfg, encoder=None),
+                                       use_moe=False)
+                           for i in range(enc.n_layers)],
+                "final_ln": jnp.zeros((cfg.d_model,), jnp.float32)}
+        if cfg.mtp:
+            params["mtp"] = {
+                "proj": init_dense(keys[5], (2 * cfg.d_model, cfg.d_model),
+                                   dtype=cfg.dtype),
+                "block": _init_block(keys[6], "attn", cfg,
+                                     use_moe=cfg.moe is not None),
+                "ln": jnp.zeros((cfg.d_model,), jnp.float32)}
+        return params
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params, frames):
+        """Whisper encoder over precomputed frame embeddings [B, T, D]."""
+        cfg = self.cfg
+        b, t, _ = frames.shape
+        pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        x = frames
+        for blk in params["enc"]["blocks"]:
+            h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+            # bidirectional chunked attention (no causal mask)
+            hq = jnp.einsum("bsd,de->bse", h, blk["mixer"]["wq"]).reshape(
+                b, t, cfg.n_heads, cfg.dh)
+            hk = jnp.einsum("bsd,de->bse", h, blk["mixer"]["wk"]).reshape(
+                b, t, cfg.n_kv_heads, cfg.dh)
+            hv = jnp.einsum("bsd,de->bse", h, blk["mixer"]["wv"]).reshape(
+                b, t, cfg.n_kv_heads, cfg.dh)
+            out = attn.chunked_attention(hq, hk, hv, pos, pos, causal=False,
+                                         window=0, chunk=cfg.attn_chunk,
+                                         canonical=True)
+            r = jnp.einsum("bse,ed->bsd",
+                           out.reshape(b, t, cfg.n_heads * cfg.dh),
+                           blk["mixer"]["wo"])
+            x = x + r
+            h2 = rms_norm(x, blk["ln2"], cfg.norm_eps)
+            x = x + ffn(blk["ffn"], h2, cfg)
+        return rms_norm(x, params["enc"]["final_ln"], cfg.norm_eps)
+
+    # ------------------------------------------------------------ trunk
+    def _trunk(self, params, x, pos, enc_kvs=None, mrope_pos=None):
+        """Full-sequence trunk (train/prefill). Returns (hidden, aux)."""
+        cfg = self.cfg
+        prelude, pattern, n_cycles, tail = _layer_kinds(cfg)
+        aux_sum = jnp.zeros((), jnp.float32)
+        drop_sum = jnp.zeros((), jnp.float32)
+        li = 0
+        for i, kind in enumerate(prelude):
+            x, _, aux = _apply_block(params["prelude"][i], x, pos, kind, cfg,
+                                     use_moe=False,
+                                     enc_kv=_idx_enc(enc_kvs, li),
+                                     mrope_pos=mrope_pos)
+            li += 1
+
+        if n_cycles:
+            def cycle(carry, xs):
+                x, aux_s, drop_s = carry
+                cyc_params, enc_kv = xs
+                for j, kind in enumerate(pattern):
+                    x, _, aux = _apply_block(
+                        cyc_params[f"sub{j}"], x, pos, kind, cfg,
+                        use_moe=cfg.moe is not None,
+                        enc_kv=(enc_kv if enc_kv is not None else None),
+                        mrope_pos=mrope_pos)
+                    if aux:
+                        aux_s = aux_s + aux["load_balance"]
+                        drop_s = drop_s + aux["dropped_frac"]
+                return (x, aux_s, drop_s), None
+
+            fn = cycle
+            if cfg.remat == "full":
+                fn = jax.checkpoint(cycle, prevent_cse=False)
+            enc_stack = _stack_enc(enc_kvs, li, n_cycles, len(pattern))
+            (x, aux_sum, drop_sum), _ = jax.lax.scan(
+                fn, (x, aux_sum, drop_sum), (params["main"], enc_stack))
+            li += n_cycles * len(pattern)
+
+        for i, kind in enumerate(tail):
+            x, _, aux = _apply_block(params["tail"][i], x, pos, kind, cfg,
+                                     use_moe=cfg.moe is not None,
+                                     enc_kv=_idx_enc(enc_kvs, li),
+                                     mrope_pos=mrope_pos)
+            if aux:
+                aux_sum = aux_sum + aux["load_balance"]
+                drop_sum = drop_sum + aux["dropped_frac"]
+            li += 1
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        return x, {"load_balance": aux_sum, "dropped": drop_sum}
+
+    # ------------------------------------------------------------ losses
+    def loss(self, params, batch):
+        """Next-token CE (+ MoE aux + MTP). batch: tokens/labels [B, S]
+        (+ frames for enc-dec, + mrope_pos for M-RoPE)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = embed(params["embed"], tokens, cfg)
+        enc_kvs = None
+        if cfg.is_encdec:
+            enc_out = self.encode(params, batch["frames"])
+            enc_kvs = self._cross_kvs(params, enc_out)
+        h, aux = self._trunk(params, x, pos, enc_kvs,
+                             mrope_pos=batch.get("mrope_pos"))
+        loss = _chunked_ce(params["embed"], h, batch["labels"], cfg)
+        total = loss + 0.01 * aux["load_balance"]
+        if cfg.mtp:
+            total = total + 0.3 * self._mtp_loss(params, h, tokens,
+                                                 batch["labels"], pos)
+        return total, dict(aux, ce=loss)
+
+    def _mtp_loss(self, params, h, tokens, labels, pos):
+        """DeepSeek-style MTP: one extra block predicts token t+2 from
+        [h_t ; emb(token_{t+1})]."""
+        cfg = self.cfg
+        emb_next = embed(params["embed"], jnp.roll(tokens, -1, axis=1), cfg)
+        hcat = jnp.concatenate(
+            [rms_norm(h, params["mtp"]["ln"], cfg.norm_eps), emb_next],
+            axis=-1)
+        h2 = jnp.einsum("bsd,de->bse", hcat, params["mtp"]["proj"])
+        h2, _, _ = _apply_block(params["mtp"]["block"], h2, pos, "attn", cfg,
+                                use_moe=cfg.moe is not None)
+        labels2 = jnp.roll(labels, -1, axis=1)
+        return _chunked_ce(params["embed"], h2, labels2, cfg)
+
+    def _cross_kvs(self, params, enc_out):
+        """Per-decoder-layer cross-attention KV (enc-dec is unrolled)."""
+        cfg = self.cfg
+        kvs = [attn.encode_cross_kv(blk["cross"], enc_out, cfg)
+               for blk in params["prelude"]]
+        kvs += [attn.encode_cross_kv(blk["cross"], enc_out, cfg)
+                for blk in params["tail"]]
+        return kvs
+
+    # ------------------------------------------------------------ serving
+    def init_caches(self, batch: int, capacity: int):
+        cfg = self.cfg
+        prelude, pattern, n_cycles, tail = _layer_kinds(cfg)
+        caches = {"prelude": [_init_cache(k, cfg, batch, capacity)
+                              for k in prelude],
+                  "tail": [_init_cache(k, cfg, batch, capacity)
+                           for k in tail]}
+        if n_cycles:
+            caches["main"] = {
+                f"sub{j}": jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (n_cycles,) + a.shape).copy(),
+                    _init_cache(kind, cfg, batch, capacity))
+                for j, kind in enumerate(pattern)}
+        return caches
+
+    def decode_step(self, params, token, caches, pos_idx, enc_kvs=None):
+        """One serving step. token: [B, 1] int32; pos_idx: scalar int32
+        (cache fill level). Returns (logits [B, 1, V], new caches)."""
+        cfg = self.cfg
+        prelude, pattern, n_cycles, tail = _layer_kinds(cfg)
+        b = token.shape[0]
+        pos = jnp.full((b, 1), pos_idx, jnp.int32)
+        mrope = (jnp.broadcast_to(pos[None], (3, b, 1))
+                 if cfg.mrope_sections else None)
+        x = embed(params["embed"], token, cfg)
+        new_caches = {"prelude": [], "tail": []}
+        li = 0
+        for i, kind in enumerate(prelude):
+            x, c, _ = _apply_block(params["prelude"][i], x, pos, kind, cfg,
+                                   use_moe=False, cache=caches["prelude"][i],
+                                   enc_kv=_idx_enc(enc_kvs, li),
+                                   mrope_pos=mrope)
+            new_caches["prelude"].append(c)
+            li += 1
+        if n_cycles:
+            def cycle(x, xs):
+                cyc_params, cyc_cache, enc_kv = xs
+                outs = {}
+                for j, kind in enumerate(pattern):
+                    x, c, _ = _apply_block(
+                        cyc_params[f"sub{j}"], x, pos, kind, cfg,
+                        use_moe=cfg.moe is not None,
+                        cache=cyc_cache[f"sub{j}"],
+                        enc_kv=(enc_kv if enc_kv is not None else None),
+                        mrope_pos=mrope)
+                    outs[f"sub{j}"] = c
+                return x, outs
+
+            enc_stack = _stack_enc(enc_kvs, li, n_cycles, len(pattern))
+            x, main_caches = jax.lax.scan(
+                cycle, x, (params["main"], caches["main"], enc_stack))
+            new_caches["main"] = main_caches
+            li += n_cycles * len(pattern)
+        for i, kind in enumerate(tail):
+            x, c, _ = _apply_block(params["tail"][i], x, pos, kind, cfg,
+                                   use_moe=cfg.moe is not None,
+                                   cache=caches["tail"][i],
+                                   enc_kv=_idx_enc(enc_kvs, li),
+                                   mrope_pos=mrope)
+            new_caches["tail"].append(c)
+            li += 1
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg)
+        return logits, new_caches
+
+    def prefill(self, params, tokens, frames=None, mrope_pos=None):
+        """Prefill hidden states (logits for the last position)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = embed(params["embed"], tokens, cfg)
+        enc_kvs = None
+        if cfg.is_encdec and frames is not None:
+            enc_kvs = self._cross_kvs(params, self.encode(params, frames))
+        h, aux = self._trunk(params, x, pos, enc_kvs, mrope_pos=mrope_pos)
+        return unembed(params["embed"], h[:, -1:], cfg), aux
+
+
+def _idx_enc(enc_kvs, li):
+    return None if enc_kvs is None else enc_kvs[li]
+
+
+def _stack_enc(enc_kvs, li, n_cycles, cyc_len):
+    # scanned cycles never coexist with enc-dec (enc-dec unrolls) — a dummy
+    # scan input keeps the xs tree static.
+    return None if enc_kvs is None else None
+
+
+def _chunked_ce(embed_params, h, labels, cfg: ModelConfig, chunk: int = 512):
+    """Sequence-chunked cross entropy: never materializes [B, S, V] f32."""
+    b, s, d = h.shape
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (s + pad) // chunk
+    hc = h.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        tot, cnt = carry
+        hx, lx = xs
+        logits = unembed(embed_params, hx, cfg).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lx, 0)[..., None], axis=-1)[..., 0]
+        valid = (lx >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((logz - gold) * valid)
+        cnt = cnt + valid.sum()
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

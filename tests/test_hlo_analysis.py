@@ -1,0 +1,91 @@
+"""The HLO cost analyzer against compiled modules with known ground truth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import analyze_module, roofline_terms
+from repro.analysis.hlo import _type_bytes
+
+
+def _compiled_text(fn, *structs):
+    return jax.jit(fn).lower(*structs).compile().as_text()
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        c, _ = jax.lax.scan(body, x, w)
+        return c
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)
+    cost = analyze_module(_compiled_text(f, x, w))
+    expect = 2 * 64 ** 3 * 12
+    assert cost.flops == expect, (cost.flops, expect)
+    assert 12 in cost.while_trips
+
+
+def test_single_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((32, 48), jnp.float32)
+    b = jax.ShapeDtypeStruct((48, 16), jnp.float32)
+    cost = analyze_module(_compiled_text(lambda a, b: a @ b, a, b))
+    assert cost.flops == 2 * 32 * 48 * 16
+
+
+def test_batched_dot_flops():
+    a = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 16, 8), jnp.float32)
+    cost = analyze_module(_compiled_text(
+        lambda a, b: jnp.einsum("bij,bjk->bik", a, b), a, b))
+    assert cost.flops == 2 * 4 * 8 * 16 * 8
+
+
+def test_dus_charged_at_update_not_buffer():
+    def f(buf, upd):
+        return jax.lax.dynamic_update_slice(buf, upd, (0, 0))
+
+    buf = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)   # 4 MB
+    upd = jax.ShapeDtypeStruct((1, 1024), jnp.float32)      # 4 KB
+    # donate the buffer so no defensive copy is emitted: the in-place DUS
+    # must then be charged near the update size, not 2x the buffer
+    text = jax.jit(f, donate_argnums=(0,)).lower(buf, upd) \
+        .compile().as_text()
+    cost = analyze_module(text)
+    assert cost.hbm_bytes < 0.5 * 4 * 1024 * 1024, cost.hbm_bytes
+
+
+def test_type_bytes_parser():
+    assert _type_bytes("f32[128,128]{1,0}") == 128 * 128 * 4
+    assert _type_bytes("bf16[2,3]{1,0}") == 12
+    assert _type_bytes("(f32[4]{0}, s32[2]{0})") == 24
+    assert _type_bytes("pred[7]{0}") == 7
+
+
+def test_roofline_terms_math():
+    from repro.analysis.hlo import ModuleCost
+    c = ModuleCost(flops=197e12, hbm_bytes=819e9, collective_bytes=200e9)
+    t = roofline_terms(c, model_flops=98.5e12)
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.memory_s - 1.0) < 1e-9
+    assert abs(t.collective_s - 1.0) < 1e-9
+    assert abs(t.useful_ratio - 0.5) < 1e-9
+    assert t.dominant in ("compute", "memory", "collective")
+
+
+def test_collective_traffic_ring_model():
+    """all-reduce over 4 devices: ring traffic = 2 * bytes * 3/4."""
+    import os
+    # use the analyzer directly on a hand-written HLO snippet
+    hlo = """
+HloModule m, is_scheduled=true
+
+ENTRY %main (p: f32[256]) -> f32[256] {
+  %p = f32[256]{0} parameter(0)
+  ROOT %ar = f32[256]{0} all-reduce(%p), replica_groups=[4,4]<=[16], to_apply=%add
+}
+"""
+    cost = analyze_module(hlo, default_group=4)
+    expect = 2.0 * 256 * 4 * 3 / 4
+    assert abs(cost.collective_bytes - expect) < 1e-6
+    assert cost.collective_counts["all-reduce"] == 1

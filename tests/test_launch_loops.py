@@ -1,0 +1,97 @@
+"""End-to-end launcher tests: train loop + fault recovery + resume + serve."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.serve import Request, Server
+from repro.launch.train import TrainConfig, train
+
+
+class _Fault(Exception):
+    pass
+
+
+def test_train_learns_and_checkpoints(tmp_path):
+    cfg = TrainConfig(arch="internlm2-1.8b", smoke=True, steps=8, batch=2,
+                      seq=16, ckpt_dir=str(tmp_path), ckpt_every=4,
+                      log_every=100)
+    losses = []
+    out = train(cfg, hooks={"on_step": lambda s, m: losses.append(
+        float(m["loss"]))})
+    assert out["last_step"] == 7
+    assert len(losses) == 8
+    assert all(np.isfinite(losses))
+    import os
+    assert any(d.startswith("step_") for d in os.listdir(str(tmp_path)))
+
+
+def test_train_fault_recovery(tmp_path):
+    fired = {"done": False}
+
+    def fault(step):
+        if step == 5 and not fired["done"]:
+            fired["done"] = True
+            raise _Fault("injected")
+
+    cfg = TrainConfig(arch="internlm2-1.8b", smoke=True, steps=8, batch=2,
+                      seq=16, ckpt_dir=str(tmp_path), ckpt_every=2,
+                      log_every=100)
+    seen = []
+    out = train(cfg, hooks={"fault": fault,
+                            "on_step": lambda s, m: seen.append(s)})
+    assert out["last_step"] == 7
+    assert fired["done"]
+    assert 5 in seen                      # the failed step was replayed
+
+
+def test_train_resume_continues(tmp_path):
+    cfg = TrainConfig(arch="internlm2-1.8b", smoke=True, steps=4, batch=2,
+                      seq=16, ckpt_dir=str(tmp_path), ckpt_every=2,
+                      log_every=100)
+    train(cfg)
+    seen = []
+    cfg2 = TrainConfig(arch="internlm2-1.8b", smoke=True, steps=7, batch=2,
+                       seq=16, ckpt_dir=str(tmp_path), ckpt_every=2,
+                       log_every=100)
+    train(cfg2, hooks={"on_step": lambda s, m: seen.append(s)})
+    assert seen and seen[0] == 5          # resumed after the step-4 ckpt
+
+
+def test_serve_greedy_matches_direct_decode():
+    srv = Server("internlm2-1.8b", smoke=True, slots=2, capacity=32)
+    prompts = [[3, 1, 4], [1, 5, 9]]
+    reqs = [Request(i, p, max_new=5) for i, p in enumerate(prompts)]
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    # direct single-sequence decode oracle
+    for r in reqs:
+        caches = srv.model.init_caches(1, 32)
+        tok = None
+        logits = None
+        for p, t in enumerate(r.prompt):
+            logits, caches = srv.model.decode_step(
+                srv.params, jnp.array([[t]], jnp.int32), caches,
+                jnp.int32(p))
+        got = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for n in range(r.max_new):
+            got.append(int(tok[0, 0]))
+            if n == r.max_new - 1:
+                break
+            logits, caches = srv.model.decode_step(
+                srv.params, tok, caches, jnp.int32(len(r.prompt) + n))
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        assert r.out == got, (r.rid, r.out, got)
+
+
+def test_serve_buckets_mixed_lengths():
+    srv = Server("rwkv6-3b", smoke=True, slots=2, capacity=32)
+    reqs = [Request(i, [1] * ln, max_new=3)
+            for i, ln in enumerate([2, 2, 4, 4, 4])]
+    for r in reqs:
+        srv.submit(r)
+    total = srv.run()
+    assert total == 15
+    assert all(r.done for r in reqs)

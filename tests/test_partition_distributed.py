@@ -1,0 +1,96 @@
+"""Partitioner invariants + multi-device decentralized == centralized
+(the system's key correctness property, run in a subprocess with forced
+host devices so the main test process keeps a 1-device view)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import random_graph
+from repro.core.partition import (partition, build_local_subgraphs,
+                                  gather_features, halo_exchange_tables)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 120), e=st.integers(10, 600), k=st.integers(1, 6),
+       seed=st.integers(0, 100))
+def test_partition_invariants(n, e, k, seed):
+    g = random_graph(n, e, 4, seed=seed)
+    part = partition(g, k, seed=seed)
+    # every node assigned exactly once
+    assert (part.assignment >= 0).all() and (part.assignment < k).all()
+    counts = np.bincount(part.assignment, minlength=k)
+    assert counts.sum() == n
+    # balance: BFS-growth targets ceil(n/k)
+    assert counts.max() <= -(-n // k) + max(2, n // max(k, 1) // 2)
+    # local_nodes holds each node exactly once
+    all_local = part.local_nodes[part.local_mask]
+    assert sorted(all_local.tolist()) == list(range(n))
+    # halo nodes are never owned by the requesting cluster
+    for c in range(k):
+        valid = part.halo_src[c] >= 0
+        assert (part.assignment[part.halo_nodes[c][valid]] != c).all()
+    # comm volume diagonal is zero (no self communication)
+    assert (np.diag(part.comm_volume) == 0).all()
+
+
+def test_comm_volume_counts_boundary_edges():
+    g = random_graph(40, 200, 4, seed=3)
+    part = partition(g, 4)
+    dst = np.repeat(np.arange(g.n_nodes), np.diff(g.indptr))
+    boundary = (part.assignment[dst] != part.assignment[g.indices]).sum()
+    assert part.comm_volume.sum() == boundary
+
+
+def test_halo_tables_point_to_owners():
+    g = random_graph(30, 150, 4, seed=4)
+    part = partition(g, 3)
+    src_c, src_s, mask = halo_exchange_tables(part)
+    for c in range(3):
+        for h in range(part.h_max):
+            if mask[c, h]:
+                owner, slot = src_c[c, h], src_s[c, h]
+                assert part.local_nodes[owner, slot] == part.halo_nodes[c, h]
+
+
+_DISTRIBUTED_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import random_graph, gnn
+from repro.core.partition import partition, build_local_subgraphs, gather_features
+from repro.distributed.halo import build_halo_plan, make_decentralized_forward
+
+g = random_graph(80, 400, 24, seed=7).gcn_normalize()
+cfg = gnn.GNNConfig(in_dim=24, hidden_dims=(16, 16), out_dim=6, sample=96)
+params = gnn.init_params(jax.random.key(0), cfg)
+nbr, wts = g.neighbor_sample(96)
+ref = np.asarray(gnn.forward(params, jnp.asarray(g.features),
+                             jnp.asarray(nbr), jnp.asarray(wts), cfg))
+part = partition(g, 8)
+sub = build_local_subgraphs(g, part, sample=96)
+feats = gather_features(g, part)
+plan = build_halo_plan(part)
+mesh = jax.make_mesh((8,), ("data",))
+for mode in ("allgather", "alltoall"):
+    fwd = make_decentralized_forward(mesh, cfg, plan, part.n_max, mode=mode)
+    out = np.asarray(fwd(params, jnp.asarray(feats),
+                         jnp.asarray(sub.neighbors), jnp.asarray(sub.weights)))
+    for c in range(8):
+        m = part.local_mask[c]
+        np.testing.assert_allclose(out[c][m], ref[part.local_nodes[c][m]],
+                                   rtol=1e-4, atol=1e-4)
+print("DISTRIBUTED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_decentralized_equals_centralized_8dev():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", _DISTRIBUTED_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)) or ".")
+    assert "DISTRIBUTED_OK" in r.stdout, r.stdout + r.stderr
