@@ -1,0 +1,139 @@
+"""Fused GNN-layer kernel vs the composed csr_aggregate -> crossbar_mvm path.
+
+Reports, per layer shape, two deltas (EXPERIMENTS.md §Fused-layer):
+
+  * analytic HBM traffic — bytes each path moves per layer on a TPU, from
+    the dataflow itself (DESIGN.md §5). The composed path round-trips the
+    aggregation output Z through HBM between the two kernels (and, on the
+    bit-accurate path, re-reads it for the DAC quantization passes); the
+    fused kernel keeps Z in VMEM, paying instead a second gather pass on the
+    bit-accurate path for the global DAC scale.
+
+      composed ideal : gather S*F + Z write F + Z read F        + out H
+      fused    ideal : gather S*F                               + out H
+      composed quant : gather S*F + Z write F + 2x(read F,
+                       write codes F, kernel read F)            + out H
+      fused    quant : 2x gather S*F + zmax write/read 2        + out H
+
+    (per node, x4 bytes; the fused bit-accurate win therefore shrinks as S
+    grows — the sweep includes shapes on both sides of the crossover.)
+
+  * measured wall-clock — interpret-mode on CPU. Interpret mode is a
+    correctness oracle, not a perf path (each grid step is interpreted), so
+    wall-clock here tracks kernel-launch/grid overhead, not HBM bandwidth;
+    the analytic column is the TPU-relevant number.
+
+  PYTHONPATH=src python benchmarks/fused_vs_composed.py [--iters 3] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.crossbar_mvm import CrossbarNumerics
+from repro.kernels.crossbar_mvm.ops import crossbar_matmul_signed
+from repro.kernels.csr_aggregate import aggregate
+from repro.kernels.fused_layer import fused_gnn_layer
+
+SHAPES = [
+    # (nodes, in-feats, out-feats, sample)
+    (256, 128, 64, 4),
+    (256, 128, 64, 16),
+    (512, 216, 128, 8),     # the paper's taxi calibration layer
+    (128, 512, 128, 4),
+]
+
+
+def _composed_layer(x, nbr, wts, w, b, cfg):
+    z = aggregate(x, nbr, wts, backend="pallas")
+    if cfg.ideal:
+        h = jnp.dot(z, w, preferred_element_type=jnp.float32)
+    else:
+        h = crossbar_matmul_signed(z, w, cfg)
+    return jnp.maximum(h + b, 0.0)
+
+
+def _fused_layer(x, nbr, wts, w, b, cfg):
+    return fused_gnn_layer(x, nbr, wts, w, b, cfg, relu=True)
+
+
+def _time(fn, args, iters: int) -> float:
+    jax.block_until_ready(fn(*args))              # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3   # ms
+
+
+def traffic_bytes(nd: int, f: int, h: int, s: int, ideal: bool):
+    """(composed, fused) analytic HBM bytes per layer (model in docstring)."""
+    gather = nd * s * f * 4
+    out = nd * h * 4
+    if ideal:
+        composed = gather + 2 * nd * f * 4 + out
+        fused = gather + out
+    else:
+        composed = gather + 7 * nd * f * 4 + out
+        fused = 2 * gather + 2 * nd * 2 * 4 + out
+    return composed, fused
+
+
+def rows(iters: int):
+    rng = np.random.default_rng(0)
+    out = []
+    for nd, f, h, s in SHAPES:
+        x = jnp.asarray(rng.normal(size=(nd, f)).astype(np.float32))
+        nbr = jnp.asarray(rng.integers(0, nd, size=(nd, s)).astype(np.int32))
+        wts = jnp.asarray(np.abs(rng.normal(size=(nd, s))).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(f, h)).astype(np.float32) * 0.05)
+        b = jnp.zeros((h,), jnp.float32)
+        for cfg in (CrossbarNumerics(ideal=True),
+                    CrossbarNumerics(adc_bits=12, rows_per_xbar=128)):
+            args = (x, nbr, wts, w, b, cfg)
+            t_c = _time(_composed_layer, args, iters)
+            t_f = _time(_fused_layer, args, iters)
+            err = float(jnp.abs(_fused_layer(*args)
+                                - _composed_layer(*args)).max())
+            b_c, b_f = traffic_bytes(nd, f, h, s, cfg.ideal)
+            out.append({
+                "shape": f"Nd={nd},F={f},H={h},S={s}",
+                "numerics": "ideal" if cfg.ideal else "quant",
+                "composed_ms": t_c, "fused_ms": t_f,
+                "composed_MB": b_c / 1e6, "fused_MB": b_f / 1e6,
+                "traffic_saving": 1.0 - b_f / b_c,
+                "max_err": err,
+            })
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rs = rows(args.iters)
+    if args.csv:
+        keys = list(rs[0])
+        print(",".join(keys))
+        for r in rs:
+            print(",".join(str(r[k]) for k in keys))
+        return 0
+    print(f"{'shape':26s} {'numerics':8s} {'composed':>9s} {'fused':>9s} "
+          f"{'HBM MB':>8s} {'HBM MB':>8s} {'saved':>6s} {'max|err|':>9s}")
+    print(f"{'':26s} {'':8s} {'ms':>9s} {'ms':>9s} "
+          f"{'composed':>8s} {'fused':>8s} {'':>6s}")
+    for r in rs:
+        print(f"{r['shape']:26s} {r['numerics']:8s} {r['composed_ms']:9.1f} "
+              f"{r['fused_ms']:9.1f} {r['composed_MB']:8.2f} "
+              f"{r['fused_MB']:8.2f} {r['traffic_saving']:5.0%} "
+              f"{r['max_err']:9.2e}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,6 +8,13 @@ Both stages run through the kernel stack: aggregation via the
 ``csr_aggregate`` padded-sample kernel, feature extraction either ideal
 (float matmul) or through the ``crossbar_mvm`` numerics — switching
 ``CrossbarNumerics(ideal=False)`` gives bit-accurate in-memory inference.
+
+Backends (``GNNConfig.backend``):
+  * ``jnp``    — composed path on XLA oracles (differentiable; training).
+  * ``pallas`` — composed path, aggregation on the ``csr_aggregate`` kernel.
+  * ``fused``  — both stages in one ``fused_gnn_layer`` kernel launch: Z
+    stays resident in VMEM between aggregation and feature extraction
+    (DESIGN.md §5). Inference/serving only — the fused kernel has no VJP.
 """
 from __future__ import annotations
 
@@ -20,6 +27,9 @@ import jax.numpy as jnp
 
 from repro.kernels.crossbar_mvm import CrossbarNumerics, crossbar_matmul_signed_ref
 from repro.kernels.csr_aggregate import aggregate
+from repro.kernels.fused_layer import fused_gnn_layer
+
+BACKENDS = ("jnp", "pallas", "fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,7 +39,7 @@ class GNNConfig:
     out_dim: int = 16
     sample: int = 16                       # padded neighbor sample size S
     numerics: CrossbarNumerics = CrossbarNumerics(ideal=True)
-    backend: str = "jnp"                   # aggregation kernel backend
+    backend: str = "jnp"                   # one of BACKENDS
     final_activation: bool = False
 
     @property
@@ -64,12 +74,18 @@ def forward(params: list, x: jax.Array, neighbors: jax.Array,
     x: [N, F_in]; neighbors/weights: [N, S] padded sample (self loops should
     be included in the sample). Returns [N, out_dim] embeddings/logits.
     """
+    assert cfg.backend in BACKENDS, cfg.backend
     h = x
     n_layers = len(params)
     for i, layer in enumerate(params):
+        act = i < n_layers - 1 or cfg.final_activation
+        if cfg.backend == "fused":
+            h = fused_gnn_layer(h, neighbors, weights, layer["w"],
+                                layer["b"], cfg.numerics, relu=act)
+            continue
         z = aggregate(h, neighbors, weights, backend=cfg.backend)  # message+agg
         h = _transform(z, layer["w"], cfg) + layer["b"]
-        if i < n_layers - 1 or cfg.final_activation:
+        if act:
             h = jax.nn.relu(h)
     return h
 

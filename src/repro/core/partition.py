@@ -194,6 +194,110 @@ def halo_exchange_tables(part: Partition):
     return part.halo_src, slot, part.halo_src >= 0
 
 
+@dataclasses.dataclass
+class ExecutionPlan:
+    """The paper's technique as a first-class object: one GNN, three
+    execution settings, one switchable kernel backend.
+
+      * ``centralized``   — one device owns the full graph (paper Fig. 4a).
+      * ``decentralized`` — one cluster per device, halo exchange per layer
+        (Fig. 4b).
+      * ``semi``          — clusters-of-clusters: a few cluster heads, each
+        centralized over its own region, heads exchanging boundary features
+        (paper §5 guideline).
+
+    ``backend`` selects the per-layer kernel path everywhere the plan runs:
+    ``jnp``/``pallas`` (composed aggregation -> MVM with the Z HBM
+    round-trip) or ``fused`` (single fused kernel, Z resident in VMEM —
+    DESIGN.md §5). Build with ``plan_execution``; call ``make_forward`` for
+    the runnable per-setting forward and ``scatter`` to map device-local
+    outputs back to global node order.
+    """
+    setting: str
+    backend: str
+    sample: int
+    n_clusters: int
+    graph: Graph
+    part: Partition | None          # None for centralized
+    sub: LocalSubgraph | None
+    feats: np.ndarray               # [K, n_max, F] (centralized: [1, N, F])
+    neighbors: np.ndarray           # [K, n_max, S] device-local sample
+    weights: np.ndarray             # [K, n_max, S]
+
+    def gnn_config(self, cfg):
+        """Rebind a GNNConfig to this plan's backend/sample."""
+        return dataclasses.replace(cfg, backend=self.backend,
+                                   sample=self.sample)
+
+    def make_forward(self, cfg, mesh=None):
+        """Runnable forward for this plan: ``fn(params) -> [K, n_max, out]``.
+
+        ``mesh`` (optional) with exactly ``n_clusters`` devices selects the
+        SPMD shard_map runtime; otherwise the mesh-free emulated exchange
+        runs the identical dataflow on however many devices exist.
+        """
+        import jax.numpy as jnp
+        from repro.core import gnn
+        cfg = self.gnn_config(cfg)
+        feats = jnp.asarray(self.feats)
+        nbr = jnp.asarray(self.neighbors)
+        wts = jnp.asarray(self.weights)
+        if self.setting == "centralized":
+            def forward(params):
+                return gnn.forward(params, feats[0], nbr[0], wts[0],
+                                   cfg)[None]
+            return forward
+        from repro.distributed.halo import (build_halo_plan,
+                                            make_decentralized_forward,
+                                            make_emulated_forward)
+        plan = build_halo_plan(self.part)
+        if mesh is not None and mesh.size == self.n_clusters:
+            fn = make_decentralized_forward(mesh, cfg, plan, self.part.n_max)
+        else:
+            fn = make_emulated_forward(cfg, plan)
+        return lambda params: fn(params, feats, nbr, wts)
+
+    def scatter(self, out: np.ndarray) -> np.ndarray:
+        """Map per-cluster outputs [K, n_max, D] to global node order."""
+        out = np.asarray(out)
+        if self.setting == "centralized":
+            return out[0]
+        full = np.zeros((self.graph.n_nodes, out.shape[-1]), out.dtype)
+        for c in range(self.n_clusters):
+            m = self.part.local_mask[c]
+            full[self.part.local_nodes[c][m]] = out[c][m]
+        return full
+
+    def predicted_metrics(self, workload_scaled: bool = False):
+        """Cost-model (Eqs. 1-7) prediction for this plan's setting."""
+        from repro.core import costmodel
+        return costmodel.predict(
+            self.setting, self.graph.stats("plan"),
+            workload_scaled=workload_scaled, n_clusters=self.n_clusters)
+
+
+def plan_execution(g: Graph, setting: str = "centralized",
+                   backend: str = "jnp", sample: int = 16,
+                   n_clusters: int | None = None,
+                   seed: int = 0) -> ExecutionPlan:
+    """Build the ExecutionPlan for one (setting, backend) combination.
+
+    ``n_clusters`` defaults per setting: 1 (centralized), 8 (decentralized
+    — one per edge device), 4 (semi — cluster heads).
+    """
+    assert setting in ("centralized", "decentralized", "semi"), setting
+    if setting == "centralized":
+        nbr, wts = g.neighbor_sample(sample)
+        return ExecutionPlan(setting, backend, sample, 1, g, None, None,
+                             g.features[None], nbr[None], wts[None])
+    k = n_clusters or (8 if setting == "decentralized" else 4)
+    part = partition(g, k, seed=seed)
+    sub = build_local_subgraphs(g, part, sample)
+    feats = gather_features(g, part)
+    return ExecutionPlan(setting, backend, sample, k, g, part, sub,
+                         feats, sub.neighbors, sub.weights)
+
+
 def rebalance(g: Graph, part: Partition, latency: np.ndarray,
               frac: float = 0.25, seed: int = 0) -> Partition:
     """Straggler mitigation: shift load away from slow clusters.

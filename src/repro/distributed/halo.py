@@ -13,6 +13,12 @@ exchange strategies are provided:
 
 All tables are padded to static shapes so a single compiled program serves
 every cluster (SPMD).
+
+The per-device layer honors ``cfg.backend``: the composed ``jnp``/``pallas``
+paths run aggregation then the feature transform, ``fused`` runs both stages
+in one ``fused_gnn_layer`` kernel launch with Z resident in VMEM (so the
+decentralized and semi-decentralized settings get the same HBM-traffic win
+as the centralized path — DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -26,7 +32,9 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.partition import Partition
-from repro.kernels.csr_aggregate import csr_aggregate_ref
+from repro.kernels.crossbar_mvm import crossbar_matmul_signed_ref
+from repro.kernels.csr_aggregate import aggregate, csr_aggregate_ref
+from repro.kernels.fused_layer import fused_gnn_layer
 
 
 @dataclasses.dataclass
@@ -94,6 +102,22 @@ def _exchange_alltoall(x_own, send_slot, send_mask, recv_to_halo, recv_mask,
     return halo.at[flat_idx].add(flat * recv_mask.reshape(-1)[:, None])
 
 
+def _layer_step(table, nbr, wts, layer, cfg, act: bool):
+    """One GNN layer on a device-local feature table, backend-dispatched.
+    Honors cfg.numerics on every backend (same contract as core.gnn)."""
+    if cfg.backend == "fused":
+        return fused_gnn_layer(table, nbr, wts, layer["w"], layer["b"],
+                               cfg.numerics, relu=act)
+    z = (csr_aggregate_ref(table, nbr, wts) if cfg.backend == "jnp"
+         else aggregate(table, nbr, wts, backend=cfg.backend))
+    if cfg.numerics.ideal:
+        x = jnp.dot(z, layer["w"], preferred_element_type=jnp.float32)
+    else:
+        x = crossbar_matmul_signed_ref(z, layer["w"], cfg.numerics)
+    x = x + layer["b"]
+    return jax.nn.relu(x) if act else x
+
+
 def make_decentralized_forward(mesh, cfg, plan: HaloPlan, n_max: int,
                                mode: str = "alltoall", axis: str = "data"):
     """Build the SPMD decentralized GNN forward for a given mesh/plan.
@@ -125,10 +149,8 @@ def make_decentralized_forward(mesh, cfg, plan: HaloPlan, n_max: int,
                                           recv_to_halo[0], recv_mask[0],
                                           h_max, axis)
             table = jnp.concatenate([x, halo], axis=0)  # [n_max+h_max, F]
-            z = csr_aggregate_ref(table, nbr, wts)
-            x = jnp.dot(z, layer["w"]) + layer["b"]
-            if i < n_layers - 1:
-                x = jax.nn.relu(x)
+            act = i < n_layers - 1 or cfg.final_activation
+            x = _layer_step(table, nbr, wts, layer, cfg, act)
         return x[None]
 
     shard = P(axis)
@@ -144,5 +166,36 @@ def make_decentralized_forward(mesh, cfg, plan: HaloPlan, n_max: int,
         return fn(params, feats, nbr, wts, consts["src_c"], consts["src_s"],
                   consts["hmask"], consts["send_slot"], consts["send_mask"],
                   consts["recv_to_halo"], consts["recv_mask"])
+
+    return forward
+
+
+def make_emulated_forward(cfg, plan: HaloPlan):
+    """Mesh-free decentralized forward: the same per-cluster dataflow and
+    halo exchange as ``make_decentralized_forward``, but with the exchange
+    realized as a host-side gather across the leading cluster axis instead
+    of a collective. Used when the cluster count exceeds the device count
+    (e.g. a 16-cluster semi-decentralized plan on a 1-CPU test host) and as
+    the single-process oracle for the SPMD path.
+
+    feats/nbr/wts: [K, n_max, {F,S}]. Returns [K, n_max, out_dim].
+    """
+    src_c = jnp.asarray(plan.src_cluster)
+    src_s = jnp.asarray(plan.src_slot)
+    hmask = jnp.asarray(plan.halo_mask.astype(np.float32))
+
+    @jax.jit
+    def forward(params, feats, nbr, wts):
+        x = feats                                   # [K, n_max, F]
+        k = x.shape[0]
+        n_layers = len(params)
+        for i, layer in enumerate(params):
+            halo = x[src_c, src_s] * hmask[..., None]   # [K, h_max, F]
+            table = jnp.concatenate([x, halo], axis=1)  # [K, n_max+h_max, F]
+            act = i < n_layers - 1 or cfg.final_activation
+            x = jnp.stack([
+                _layer_step(table[c], nbr[c], wts[c], layer, cfg, act)
+                for c in range(k)])
+        return x
 
     return forward

@@ -1,0 +1,125 @@
+"""Jitted public wrappers for the fused GNN-layer kernel.
+
+``fused_gnn_layer`` pads to block multiples, handles the bit-accurate path's
+global DAC-scale dependency (the one piece of the composed pipeline that
+cannot live inside a block-local kernel: the DAC scale is a full-tensor max
+over Z), and dispatches to the right kernel:
+
+  * ideal numerics     — one fused kernel launch; Z never touches HBM.
+  * bit-accurate       — a scale pass (``fused_zmax``, writes [Nd, 2] scalars
+    instead of the [Nd, F] Z block) followed by the fused quantized kernel.
+    Both passes keep Z in VMEM; HBM traffic for Z drops from 4 full
+    materializations (write + quantize-max read + pos/neg DAC reads) to
+    2*Nd floats.
+
+``fused_gnn_forward`` is the multi-layer driver (the full-graph network),
+``fused_gnn_forward_batched`` maps it over a leading cluster/device axis —
+the building block the decentralized/semi serving paths use per device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.crossbar_mvm.ref import (CrossbarNumerics,
+                                            quantize_weights)
+from .fused_layer import fused_ideal_layer, fused_quant_layer, fused_zmax
+
+
+def _pad_cols(a: jax.Array, mult: int) -> jax.Array:
+    pad = (-a.shape[-1]) % mult
+    return jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)]) if pad else a
+
+
+def _pad_rows(a: jax.Array, mult: int) -> jax.Array:
+    pad = (-a.shape[0]) % mult
+    return jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)) if pad else a
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "relu", "bf", "interpret"))
+def fused_gnn_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
+                    w: jax.Array, b: jax.Array,
+                    cfg: CrossbarNumerics = CrossbarNumerics(ideal=True),
+                    *, relu: bool = False, bf: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """act((A_hat @ X) @ W + b) with Z resident in VMEM throughout.
+
+    x: [N, F]; neighbors: [Nd, S] int32; weights: [Nd, S]; w: [F, H]; b: [H].
+    Matches ``ref.fused_layer_ref`` (the composed csr_aggregate +
+    crossbar_mvm path) for both ideal and bit-accurate ``cfg``.
+    """
+    n, f = x.shape
+    f2, h = w.shape
+    assert f == f2, (x.shape, w.shape)
+    if cfg.ideal:
+        xp = _pad_cols(x, bf)
+        wp = _pad_cols(_pad_rows(w, bf), bf)
+        bp = _pad_cols(b[None], bf)[0]
+        out = fused_ideal_layer(xp, neighbors, weights, wp, bp,
+                                relu=relu, interpret=interpret)
+        return out[:, :h]
+    # bit-accurate path: K must tile into physical crossbars of
+    # rows_per_xbar rows (zero-padded, exactly as the composed kernel pads
+    # its codes), H lane-aligned to bf.
+    xp = _pad_cols(x, cfg.rows_per_xbar)
+    zmax = fused_zmax(xp, neighbors, weights, interpret=interpret)
+    # global DAC scales of max(Z,0) / max(-Z,0) — identical to
+    # quantize_inputs() on the materialized Z of the composed path
+    scale_pos = jnp.maximum(jnp.max(zmax[:, 0]), 1e-8) / cfg.in_levels
+    scale_neg = jnp.maximum(jnp.max(zmax[:, 1]), 1e-8) / cfg.in_levels
+    wq, w_scale = quantize_weights(w, cfg)
+    wqp = _pad_cols(_pad_rows(wq, cfg.rows_per_xbar), bf)
+    bp = _pad_cols(b[None], bf)[0]
+    scales = jnp.stack([scale_pos, scale_neg, w_scale])
+    out = fused_quant_layer(xp, neighbors, weights, wqp, bp, scales, cfg,
+                            relu=relu, interpret=interpret)
+    return out[:, :h]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "final_activation", "bf",
+                                    "interpret"))
+def fused_gnn_forward(params: list, x: jax.Array, neighbors: jax.Array,
+                      weights: jax.Array,
+                      cfg: CrossbarNumerics = CrossbarNumerics(ideal=True),
+                      *, final_activation: bool = False, bf: int = 128,
+                      interpret: bool = True) -> jax.Array:
+    """Multi-layer fused driver: the full-graph GNN forward, one fused
+    kernel launch per layer (plus the scale pass on the bit-accurate path).
+
+    params: [{'w': [F_i, F_i+1], 'b': [F_i+1]}, ...]; x: [N, F_0];
+    neighbors/weights: [N, S]. Semantics match ``repro.core.gnn.forward``.
+    """
+    h = x
+    n_layers = len(params)
+    for i, layer in enumerate(params):
+        relu = i < n_layers - 1 or final_activation
+        h = fused_gnn_layer(h, neighbors, weights, layer["w"], layer["b"],
+                            cfg, relu=relu, bf=bf, interpret=interpret)
+    return h
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "final_activation", "bf",
+                                    "interpret"))
+def fused_gnn_forward_batched(params: list, x: jax.Array,
+                              neighbors: jax.Array, weights: jax.Array,
+                              cfg: CrossbarNumerics = CrossbarNumerics(
+                                  ideal=True),
+                              *, final_activation: bool = False,
+                              bf: int = 128,
+                              interpret: bool = True) -> jax.Array:
+    """Batched multi-layer driver over a leading cluster/device axis.
+
+    x: [K, N, F]; neighbors/weights: [K, N, S]. Each cluster runs the fused
+    multi-layer forward on its own subgraph (static unroll — K is the
+    partition fan-out, small by construction). Returns [K, N, out_dim].
+    """
+    outs = [fused_gnn_forward(params, x[k], neighbors[k], weights[k], cfg,
+                              final_activation=final_activation, bf=bf,
+                              interpret=interpret)
+            for k in range(x.shape[0])]
+    return jnp.stack(outs)

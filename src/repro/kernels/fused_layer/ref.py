@@ -1,0 +1,37 @@
+"""Composed-path oracle for the fused GNN layer.
+
+The fused kernel must match ``csr_aggregate`` -> ``crossbar_mvm`` run
+back-to-back (the two-kernel path with the HBM round-trip of Z); this module
+is that composition expressed through the existing oracles, so the fused
+kernel, the composed Pallas kernels, and the jnp references all agree on one
+definition of a GNN layer:
+
+    fused_layer_ref(x, nbr, wts, W, b) = act(agg(x, nbr, wts) @ W + b)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.crossbar_mvm.ref import (CrossbarNumerics,
+                                            crossbar_matmul_signed_ref)
+from repro.kernels.csr_aggregate.ref import csr_aggregate_ref
+
+
+@partial(jax.jit, static_argnames=("cfg", "relu"))
+def fused_layer_ref(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
+                    w: jax.Array, b: jax.Array,
+                    cfg: CrossbarNumerics = CrossbarNumerics(ideal=True),
+                    relu: bool = False) -> jax.Array:
+    """One GNN layer through the composed two-stage path (the HBM-round-trip
+    reference the fused kernel is checked against)."""
+    z = csr_aggregate_ref(x, neighbors, weights)
+    if cfg.ideal:
+        h = jnp.dot(z, w.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    else:
+        h = crossbar_matmul_signed_ref(z, w, cfg)
+    h = h + b.astype(jnp.float32)
+    return jnp.maximum(h, 0.0) if relu else h

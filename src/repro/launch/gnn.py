@@ -1,0 +1,110 @@
+"""GNN embedding-serving driver over an ExecutionPlan.
+
+The GNN analogue of ``launch.serve``: requests are node-embedding lookups
+against a graph whose embeddings are refreshed by running the plan's forward
+(centralized, decentralized, or semi-decentralized — paper Fig. 4 / §5), on
+any of the kernel backends (``jnp``, ``pallas``, ``fused``). The fused
+backend runs each layer's aggregation + crossbar MVM in a single kernel with
+Z resident in VMEM (DESIGN.md §5), so every setting benefits — this is the
+serving-path entry point the benchmark sweep and the examples drive.
+
+  PYTHONPATH=src python -m repro.launch.gnn --setting semi --backend fused \
+      --clusters 4 --sample 8 --requests 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import costmodel, dataset_like, gnn
+from repro.core.partition import ExecutionPlan, plan_execution
+from repro.launch.mesh import make_mesh
+
+
+class GNNServer:
+    """Embedding server: refresh via the plan's forward, serve row lookups."""
+
+    def __init__(self, plan: ExecutionPlan, cfg: gnn.GNNConfig,
+                 params=None, mesh=None, seed: int = 0):
+        self.plan = plan
+        self.cfg = plan.gnn_config(cfg)
+        self.params = params if params is not None else gnn.init_params(
+            jax.random.key(seed), self.cfg)
+        self._forward = plan.make_forward(cfg, mesh=mesh)
+        self.embeddings: np.ndarray | None = None
+        self.refreshes = 0
+
+    def refresh(self) -> float:
+        """Recompute all node embeddings; returns wall-clock seconds."""
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self._forward(self.params))
+        self.embeddings = self.plan.scatter(np.asarray(out))
+        self.refreshes += 1
+        return time.perf_counter() - t0
+
+    def query(self, node_ids) -> np.ndarray:
+        """Serve one batch of embedding lookups (refresh if stale)."""
+        if self.embeddings is None:
+            self.refresh()
+        return self.embeddings[np.asarray(node_ids)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--setting", default="decentralized",
+                    choices=("centralized", "decentralized", "semi"))
+    ap.add_argument("--backend", default="fused",
+                    choices=gnn.BACKENDS)
+    ap.add_argument("--dataset", default="collab")
+    ap.add_argument("--scale", type=float, default=0.001)
+    ap.add_argument("--clusters", type=int, default=0,
+                    help="default: one per device (decentralized) / 4 (semi)")
+    ap.add_argument("--sample", type=int, default=8)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    args = ap.parse_args()
+
+    g = dataset_like(args.dataset, scale=args.scale, seed=0).gcn_normalize()
+    n_dev = len(jax.devices())
+    k = args.clusters or (n_dev if args.setting == "decentralized" else 4)
+    plan = plan_execution(g, args.setting, backend=args.backend,
+                          sample=args.sample,
+                          n_clusters=None if args.setting == "centralized"
+                          else k)
+    mesh = (make_mesh((n_dev,), ("data",))
+            if plan.n_clusters == n_dev and args.setting != "centralized"
+            else None)
+    cfg = gnn.GNNConfig(in_dim=g.feature_len, hidden_dims=(args.hidden,),
+                        out_dim=16, sample=args.sample)
+    srv = GNNServer(plan, cfg, mesh=mesh)
+
+    dt = srv.refresh()
+    print(f"plan: {args.setting}/{args.backend}, {g.n_nodes} nodes, "
+          f"{plan.n_clusters} clusters on {n_dev} devices; "
+          f"embedding refresh {dt * 1e3:.1f} ms")
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    served = 0
+    for _ in range(args.requests):
+        ids = rng.integers(0, g.n_nodes, args.batch)
+        out = srv.query(ids)
+        served += len(ids)
+    dt = time.perf_counter() - t0
+    print(f"served {served} lookups in {dt * 1e3:.1f} ms "
+          f"({served / dt:.0f} lookups/s)")
+
+    m = plan.predicted_metrics()
+    print(f"cost model ({args.setting}): T_compute {m.t_compute:.3e} s, "
+          f"T_comm {m.t_communicate:.3e} s, P {m.p_net * 1e3:.1f} mW")
+    best, _ = costmodel.pick_setting(g.stats(args.dataset),
+                                     n_clusters=plan.n_clusters)
+    print(f"cost-model guideline for this graph: {best}")
+
+
+if __name__ == "__main__":
+    main()

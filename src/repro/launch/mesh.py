@@ -1,21 +1,43 @@
-"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16)."""
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+``jax.sharding.AxisType`` (and the ``axis_types`` kwarg of ``jax.make_mesh``)
+only exist from jax 0.5.x; on older installs every axis is implicitly Auto,
+so the fallback simply omits the kwarg — semantics are identical.
+"""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # older jax: axes are Auto-typed by default
+    _AxisType = None
+
+
+def set_mesh(mesh):
+    """Compat for ``jax.set_mesh`` (jax >= 0.5): on older jax the Mesh object
+    itself is the context manager that installs the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def _mesh(shape, axes):
+    if _AxisType is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(_AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """General helper for tests/examples (Auto axis types, any size)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def preferred_tp(cfg, n_chips: int, max_tp: int = 16) -> int:

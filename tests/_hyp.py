@@ -1,0 +1,74 @@
+"""Hypothesis import shim: real hypothesis when installed, a deterministic
+mini-sweep fallback otherwise.
+
+The test modules' property tests only use ``@settings``/``@given`` with the
+``integers``/``floats``/``sampled_from``/``booleans`` strategies. When
+hypothesis is absent (it is an optional dev dep — see requirements-dev.txt),
+the fallback runs each property test on a fixed-seed random sweep of
+``max_examples`` draws instead of skipping it, so kernel/oracle equivalence
+coverage survives on a bare interpreter. Shrinking, the example database, and
+edge-case biasing are hypothesis-only; install it for the full treatment.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                rng = random.Random(0)
+                n = getattr(run, "_max_examples", 20)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            # hide the strategy-drawn params from pytest's fixture resolver:
+            # expose a signature containing only the remaining (fixture) args
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strategies]
+            del run.__wrapped__
+            run.__signature__ = sig.replace(parameters=params)
+            return run
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,11 @@
+"""Ensure the tests directory is importable (for the _hyp hypothesis shim)
+regardless of pytest's import mode / invocation directory."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running multi-device subprocess test")

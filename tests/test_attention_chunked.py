@@ -3,7 +3,7 @@ canonical-mask parity, and sliding-window semantics."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.models.attention import NEG_INF, chunked_attention
 

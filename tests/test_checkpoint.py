@@ -60,8 +60,8 @@ def test_elastic_restore_onto_mesh(tmp_path):
     t = _tree()
     save_checkpoint(str(tmp_path), 3, t)
     mgr = CheckpointManager(str(tmp_path))
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import PartitionSpec as P
     like = jax.tree.map(lambda x: np.zeros(x.shape, x.dtype), t)
     specs = jax.tree.map(lambda x: P(), like)

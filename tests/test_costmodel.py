@@ -3,7 +3,7 @@ numbers (Table 1, the ~790x/~1400x headline averages, Fig. 8 trends)."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (TABLE2_DATASETS, TAXI_STATS, DEFAULT_HW, GraphStats,
                         predict, headline_averages, table1, pick_setting)

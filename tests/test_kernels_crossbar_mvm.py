@@ -3,7 +3,7 @@ properties of the quantization numerics."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels.crossbar_mvm import (
     CrossbarNumerics, crossbar_matmul, crossbar_matmul_ref,

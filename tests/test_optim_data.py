@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data.tokens import TokenStream, synthetic_batch
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
@@ -78,8 +78,8 @@ def test_error_feedback_unbiased_over_steps():
 def test_compressed_psum_matches_mean():
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     g = jnp.linspace(-1, 1, 32).reshape(4, 8)
     r = jnp.zeros_like(g)
     fn = shard_map(lambda g, r: compressed_psum(g, r, "data"), mesh=mesh,
