@@ -3,11 +3,12 @@ from .graph import Graph, GraphStats, TABLE2_DATASETS, TAXI_STATS, random_graph,
 from .costmodel import (HardwareParams, DEFAULT_HW, NetMetrics, CoreLatency,
                         predict, compute_latency, communicate_latency, power,
                         headline_averages, table1, pick_setting)
-from .partition import ExecutionPlan, plan_execution
+from .partition import (ExecutionPlan, HierPartition, hier_partition,
+                        plan_execution)
 from . import gnn, taxi, partition
 
 __all__ = [
-    "ExecutionPlan", "plan_execution",
+    "ExecutionPlan", "HierPartition", "hier_partition", "plan_execution",
     "Graph", "GraphStats", "TABLE2_DATASETS", "TAXI_STATS", "random_graph",
     "dataset_like", "HardwareParams", "DEFAULT_HW", "NetMetrics",
     "CoreLatency", "predict", "compute_latency", "communicate_latency",

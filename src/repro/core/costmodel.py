@@ -140,9 +140,14 @@ def per_node_latency(stats: GraphStats, hw: HardwareParams = DEFAULT_HW,
 def compute_latency(setting: Setting, stats: GraphStats,
                     hw: HardwareParams = DEFAULT_HW,
                     workload_scaled: bool = False,
-                    n_clusters: int = 1) -> CoreLatency:
-    """Eq. 2 (decentralized) / Eq. 3 (centralized) / semi (beyond-paper)."""
-    t = per_node_latency(stats, hw, workload_scaled)
+                    n_clusters: int = 1,
+                    sample: int | None = None) -> CoreLatency:
+    """Eq. 2 (decentralized) / Eq. 3 (centralized) / semi (beyond-paper).
+
+    ``sample`` is the runtime's configured neighbor-sample size; the
+    workload-scaled mode uses it for the aggregation-core pass count
+    (``None`` falls back to the Table-2 ``avg_cs`` heuristic)."""
+    t = per_node_latency(stats, hw, workload_scaled, sample)
     if setting == "decentralized":
         return t
     if setting == "centralized":
@@ -197,9 +202,11 @@ def power(setting: Setting, stats: GraphStats,
 
 def predict(setting: Setting, stats: GraphStats,
             hw: HardwareParams = DEFAULT_HW, workload_scaled: bool = False,
-            n_clusters: int = 1, gnn_layers: int = 2) -> NetMetrics:
+            n_clusters: int = 1, gnn_layers: int = 2,
+            sample: int | None = None) -> NetMetrics:
     """Full Eq. 1 + Eq. 6 evaluation for one setting on one workload."""
-    comp = compute_latency(setting, stats, hw, workload_scaled, n_clusters)
+    comp = compute_latency(setting, stats, hw, workload_scaled, n_clusters,
+                           sample)
     comm = communicate_latency(setting, stats, hw, n_clusters)
     p_comp, p_comm = power(setting, stats, hw, gnn_layers)
     return NetMetrics(setting, comp, comp.total, comm, p_comp, p_comm)

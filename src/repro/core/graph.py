@@ -41,6 +41,8 @@ class Graph:
     indices: np.ndarray           # [E]   int32
     edge_weight: np.ndarray | None  # [E] float32 (None => unweighted)
     features: np.ndarray | None     # [N, F] float32
+    self_loop: np.ndarray | None = None  # [N] implicit self-loop weight
+    #                                      (None => 1.0, i.e. plain A + I)
 
     @property
     def n_nodes(self) -> int:
@@ -66,20 +68,23 @@ class Graph:
         return np.diff(self.indptr)
 
     def gcn_normalize(self) -> "Graph":
-        """Symmetric GCN normalization: w_ij = 1/sqrt((d_i+1)(d_j+1)) with
-        implicit self loops added by the aggregation layer."""
+        """Symmetric GCN normalization ``A_hat = D^-1/2 (A + I) D^-1/2``:
+        w_ij = 1/sqrt((d_i+1)(d_j+1)) on the stored edges, and the implicit
+        self loop added by the aggregation layer carries A_hat's diagonal
+        weight 1/(d_i+1) (recorded in ``self_loop``)."""
         deg = self.degrees().astype(np.float64) + 1.0
         src = self.indices
         dst = np.repeat(np.arange(self.n_nodes), np.diff(self.indptr))
         w = 1.0 / np.sqrt(deg[dst] * deg[src])
         return Graph(self.indptr, self.indices, w.astype(np.float32),
-                     self.features)
+                     self.features, (1.0 / deg).astype(np.float32))
 
     def neighbor_sample(self, sample: int, self_loops: bool = True):
         """Padded fixed-size neighbor sample (paper Table-2 mapping)."""
         from repro.kernels.csr_aggregate import pad_neighbors
         return pad_neighbors(self.indptr, self.indices, self.edge_weight,
-                             sample, self_loops=self_loops)
+                             sample, self_loops=self_loops,
+                             self_loop_weight=self.self_loop)
 
 
 def random_graph(n_nodes: int, n_edges: int, feature_len: int,
@@ -102,8 +107,17 @@ def random_graph(n_nodes: int, n_edges: int, feature_len: int,
 
 
 def dataset_like(name: str, scale: float = 1.0, seed: int = 0) -> Graph:
-    """A synthetic graph with (optionally downscaled) Table-2 statistics."""
-    s = TABLE2_DATASETS[name] if name in TABLE2_DATASETS else TAXI_STATS
+    """A synthetic graph with (optionally downscaled) Table-2 statistics.
+
+    Valid names are the Table-2 datasets plus ``"taxi"`` (the §4.2 case
+    study); anything else raises ``ValueError`` — a typo must not silently
+    substitute a wrong-scale graph.
+    """
+    datasets = dict(TABLE2_DATASETS, taxi=TAXI_STATS)
+    if name not in datasets:
+        raise ValueError(f"unknown dataset {name!r}; valid names: "
+                         f"{sorted(datasets)}")
+    s = datasets[name]
     n = max(int(s.n_nodes * scale), 8)
     e = max(int(s.n_edges * scale), 16)
     return random_graph(n, e, s.feature_len, seed=seed)

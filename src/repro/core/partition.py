@@ -12,8 +12,11 @@ together), and derives everything the runtime and the cost model need:
 
 ``ExecutionPlan`` is the paper's technique as a first-class object: the same
 GNN runs centralized (one device owns everything), decentralized (one cluster
-per device, halo exchange per layer), or semi-decentralized (clusters of
-clusters — the paper's §5 guideline).
+per device, halo exchange per layer), or semi-decentralized — a genuine
+two-tier hierarchy built by ``hier_partition``: cluster heads own regions,
+member spokes upload features to their head (tier 0), and heads exchange
+boundary halos among themselves (tier 1) — the paper's §5 guideline made
+executable (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -33,7 +36,12 @@ class Partition:
     local_mask: np.ndarray        # [K, n_max] bool
     halo_nodes: np.ndarray        # [K, h_max] int32 global ids needed from
     halo_src: np.ndarray          # [K, h_max] int32 owning cluster (pad: -1)
-    comm_volume: np.ndarray       # [K, K] int64 e_ij boundary-edge counts
+    comm_volume: np.ndarray       # [K, K] int64 e_ij: feature rows cluster i
+    #                               receives from cluster j per layer (unique
+    #                               remote sources of its boundary edges — the
+    #                               rows the alltoall exchange ships)
+    sample: int | None = None     # the neighbor-sample size the halo/comm
+    #                               tables were pruned to (None: unpruned)
 
     @property
     def n_max(self) -> int:
@@ -85,37 +93,34 @@ def _bfs_clusters(g: Graph, k: int, seed: int = 0) -> np.ndarray:
     return assignment
 
 
-def partition(g: Graph, n_clusters: int, seed: int = 0) -> Partition:
+def _sample_edge_mask(g: Graph, sample: int | None,
+                      self_loops: bool = True) -> np.ndarray:
+    """Boolean [E] mask of the edges the padded-sample runtime reads.
+
+    ``build_local_subgraphs``/``pad_neighbors`` truncate each node to its
+    first ``sample - 1`` neighbors (one slot is the self loop); halo and
+    comm tables built from *all* edges would ship rows the kernels never
+    touch. ``sample=None`` keeps every edge."""
+    if sample is None:
+        return np.ones(g.n_edges, bool)
+    cap = sample - 1 if self_loops else sample
+    deg = np.diff(g.indptr)
+    pos = np.arange(g.n_edges) - np.repeat(g.indptr[:-1], deg)
+    return pos < cap
+
+
+def partition(g: Graph, n_clusters: int, seed: int = 0,
+              sample: int | None = None,
+              self_loops: bool = True) -> Partition:
+    """BFS-grow ``n_clusters`` clusters and derive all exchange tables.
+
+    ``sample`` (optional) prunes the halo/comm tables to the edges the
+    padded-sample runtime actually reads, so tabulated e_ij equals the rows
+    the alltoall exchange measurably ships (``plan_execution`` passes its
+    sample through here)."""
     assignment = _bfs_clusters(g, n_clusters, seed)
-    k = n_clusters
-    members = [np.nonzero(assignment == c)[0].astype(np.int32)
-               for c in range(k)]
-    n_max = max(max(len(m) for m in members), 1)
-
-    # halo: for each cluster, remote sources of its boundary edges
-    halos, comm = [], np.zeros((k, k), np.int64)
-    dst_cluster = assignment[np.repeat(np.arange(g.n_nodes),
-                                       np.diff(g.indptr))]
-    src_cluster = assignment[g.indices]
-    for c in range(k):
-        mask = (dst_cluster == c) & (src_cluster != c)
-        remote = np.unique(g.indices[mask])
-        halos.append(remote.astype(np.int32))
-        pairs, counts = np.unique(src_cluster[mask], return_counts=True)
-        comm[c, pairs] = counts
-    h_max = max(max((len(h) for h in halos), default=0), 1)
-
-    local_nodes = np.full((k, n_max), -1, np.int32)
-    local_mask = np.zeros((k, n_max), bool)
-    halo_nodes = np.full((k, h_max), 0, np.int32)
-    halo_src = np.full((k, h_max), -1, np.int32)
-    for c in range(k):
-        local_nodes[c, :len(members[c])] = members[c]
-        local_mask[c, :len(members[c])] = True
-        halo_nodes[c, :len(halos[c])] = halos[c]
-        halo_src[c, :len(halos[c])] = assignment[halos[c]]
-    return Partition(assignment, k, local_nodes, local_mask,
-                     halo_nodes, halo_src, comm)
+    return _from_assignment(g, assignment, n_clusters, sample=sample,
+                            self_loops=self_loops)
 
 
 @dataclasses.dataclass
@@ -133,9 +138,19 @@ class LocalSubgraph:
 
 def build_local_subgraphs(g: Graph, part: Partition, sample: int,
                           self_loops: bool = True) -> LocalSubgraph:
+    if part.sample is not None and sample > part.sample:
+        raise ValueError(
+            f"subgraph sample {sample} exceeds the sample {part.sample} the "
+            f"partition's halo tables were pruned to — neighbors past the "
+            f"pruning cut have no halo row; rebuild the partition with "
+            f"sample >= {sample}")
     k, n_max, h_max = part.n_clusters, part.n_max, part.h_max
     nbr = np.zeros((k, n_max, sample), np.int32)
     wts = np.zeros((k, n_max, sample), np.float32)
+    # self-loop weight honors the graph's normalization (gcn_normalize sets
+    # A_hat's diagonal 1/(d_i+1); unnormalized graphs keep A + I's 1.0)
+    sl = (g.self_loop if g.self_loop is not None
+          else np.ones(g.n_nodes, np.float32))
     for c in range(k):
         # global -> local mapping for owned + halo nodes
         g2l = {}
@@ -158,7 +173,7 @@ def build_local_subgraphs(g: Graph, part: Partition, sample: int,
                                  if g.edge_weight is not None else 1.0)
             if self_loops:
                 nbr[c, li, take] = li
-                wts[c, li, take] = 1.0
+                wts[c, li, take] = sl[u]
     return LocalSubgraph(nbr, wts, part.local_mask)
 
 
@@ -170,6 +185,77 @@ def gather_features(g: Graph, part: Partition) -> np.ndarray:
     for c in range(k):
         m = part.local_mask[c]
         out[c, m] = g.features[part.local_nodes[c][m]]
+    return out
+
+
+@dataclasses.dataclass
+class HierPartition:
+    """Two-tier semi-decentralized partition (the paper's §5 hierarchy).
+
+    The graph is split into ``n_heads`` *regions*, each fronted by a cluster
+    head (an infrastructure edge server). Every region's nodes are spread
+    over ``spokes_per_region`` member edge devices (spokes) that hold the raw
+    features. Tier 0 is the intra-region spoke->head feature upload; tier 1
+    is the head<->head boundary halo exchange over ``region``'s tables.
+    """
+    region: Partition             # tier-1 partition over the R regions
+    n_heads: int
+    spokes_per_region: int
+    spoke_nodes: np.ndarray       # [R, P, m_max] int32 global ids (pad: -1)
+    spoke_mask: np.ndarray        # [R, P, m_max] bool
+    gather_spoke: np.ndarray      # [R, n_max] spoke owning each region row
+    gather_slot: np.ndarray       # [R, n_max] slot in that spoke's table
+
+    @property
+    def m_max(self) -> int:
+        return self.spoke_nodes.shape[2]
+
+
+def hier_partition(g: Graph, n_heads: int, nodes_per_region: int = 4,
+                   sample: int | None = None, seed: int = 0) -> HierPartition:
+    """Region-level partition (cluster heads) nested over member clusters.
+
+    ``nodes_per_region`` is the number of member edge devices (spokes) under
+    each head; a region's owned nodes are split into that many balanced
+    contiguous spoke tables. ``sample`` prunes the tier-1 halo/comm tables
+    exactly as in ``partition``.
+    """
+    region = partition(g, n_heads, seed=seed, sample=sample)
+    p = max(int(nodes_per_region), 1)
+    n_max = region.n_max
+    spoke_id = np.zeros((n_heads, n_max), np.int32)
+    sizes = np.zeros((n_heads, p), np.int64)
+    for r in range(n_heads):
+        m = int(region.local_mask[r].sum())
+        for i in range(m):
+            spoke_id[r, i] = i * p // max(m, 1)
+        np.add.at(sizes[r], spoke_id[r, :m], 1)
+    m_max = max(int(sizes.max()), 1)
+    spoke_nodes = np.full((n_heads, p, m_max), -1, np.int32)
+    spoke_mask = np.zeros((n_heads, p, m_max), bool)
+    gather_spoke = np.zeros((n_heads, n_max), np.int32)
+    gather_slot = np.zeros((n_heads, n_max), np.int32)
+    fill = np.zeros((n_heads, p), np.int64)
+    for r in range(n_heads):
+        m = int(region.local_mask[r].sum())
+        for i in range(m):
+            s = int(spoke_id[r, i])
+            t = int(fill[r, s])
+            fill[r, s] += 1
+            spoke_nodes[r, s, t] = region.local_nodes[r, i]
+            spoke_mask[r, s, t] = True
+            gather_spoke[r, i] = s
+            gather_slot[r, i] = t
+    return HierPartition(region, n_heads, p, spoke_nodes, spoke_mask,
+                         gather_spoke, gather_slot)
+
+
+def gather_spoke_features(g: Graph, hier: HierPartition) -> np.ndarray:
+    """[R, P, m_max, F] spoke-resident node features (pad rows zero)."""
+    r, p, m_max = hier.spoke_nodes.shape
+    out = np.zeros((r, p, m_max, g.feature_len), np.float32)
+    m = hier.spoke_mask
+    out[m] = g.features[hier.spoke_nodes[m]]
     return out
 
 
@@ -202,9 +288,10 @@ class ExecutionPlan:
       * ``centralized``   — one device owns the full graph (paper Fig. 4a).
       * ``decentralized`` — one cluster per device, halo exchange per layer
         (Fig. 4b).
-      * ``semi``          — clusters-of-clusters: a few cluster heads, each
-        centralized over its own region, heads exchanging boundary features
-        (paper §5 guideline).
+      * ``semi``          — the genuine two-tier hierarchy (paper §5 /
+        DESIGN.md §7): ``n_clusters`` cluster heads, each centralized over
+        its own region; spokes upload features to their head (tier 0), heads
+        exchange boundary halos per layer (tier 1).
 
     ``backend`` selects the per-layer kernel path everywhere the plan runs:
     ``jnp``/``pallas`` (composed aggregation -> MVM with the Z HBM
@@ -218,23 +305,28 @@ class ExecutionPlan:
     sample: int
     n_clusters: int
     graph: Graph
-    part: Partition | None          # None for centralized
+    part: Partition | None          # None for centralized; the region-level
+    #                                 (tier-1) partition for semi
     sub: LocalSubgraph | None
-    feats: np.ndarray               # [K, n_max, F] (centralized: [1, N, F])
+    feats: np.ndarray               # [K, n_max, F] (centralized: [1, N, F];
+    #                                 semi: [R, P, m_max, F] spoke tables)
     neighbors: np.ndarray           # [K, n_max, S] device-local sample
     weights: np.ndarray             # [K, n_max, S]
+    hier: HierPartition | None = None   # set for setting == "semi"
 
     def gnn_config(self, cfg):
         """Rebind a GNNConfig to this plan's backend/sample."""
         return dataclasses.replace(cfg, backend=self.backend,
                                    sample=self.sample)
 
-    def make_forward(self, cfg, mesh=None):
+    def make_forward(self, cfg, mesh=None, mode: str = "alltoall"):
         """Runnable forward for this plan: ``fn(params) -> [K, n_max, out]``.
 
         ``mesh`` (optional) with exactly ``n_clusters`` devices selects the
         SPMD shard_map runtime; otherwise the mesh-free emulated exchange
-        runs the identical dataflow on however many devices exist.
+        runs the identical dataflow on however many devices exist. ``mode``
+        picks the halo-exchange strategy (``allgather``/``alltoall``) on
+        both runtimes and, for semi, on the tier-1 head<->head exchange.
         """
         import jax.numpy as jnp
         from repro.core import gnn
@@ -247,14 +339,24 @@ class ExecutionPlan:
                 return gnn.forward(params, feats[0], nbr[0], wts[0],
                                    cfg)[None]
             return forward
+        spmd = mesh is not None and mesh.size == self.n_clusters
+        if self.setting == "semi":
+            from repro.distributed.halo import (build_two_tier_plan,
+                                                make_emulated_semi_forward,
+                                                make_semi_forward)
+            plan = build_two_tier_plan(self.hier)
+            fn = (make_semi_forward(mesh, cfg, plan, mode=mode) if spmd
+                  else make_emulated_semi_forward(cfg, plan, mode=mode))
+            return lambda params: fn(params, feats, nbr, wts)
         from repro.distributed.halo import (build_halo_plan,
                                             make_decentralized_forward,
                                             make_emulated_forward)
         plan = build_halo_plan(self.part)
-        if mesh is not None and mesh.size == self.n_clusters:
-            fn = make_decentralized_forward(mesh, cfg, plan, self.part.n_max)
+        if spmd:
+            fn = make_decentralized_forward(mesh, cfg, plan, self.part.n_max,
+                                            mode=mode)
         else:
-            fn = make_emulated_forward(cfg, plan)
+            fn = make_emulated_forward(cfg, plan, mode=mode)
         return lambda params: fn(params, feats, nbr, wts)
 
     def scatter(self, out: np.ndarray) -> np.ndarray:
@@ -273,17 +375,31 @@ class ExecutionPlan:
         from repro.core import costmodel
         return costmodel.predict(
             self.setting, self.graph.stats("plan"),
-            workload_scaled=workload_scaled, n_clusters=self.n_clusters)
+            workload_scaled=workload_scaled, n_clusters=self.n_clusters,
+            sample=self.sample)
+
+    def measured_traffic(self, cfg=None, mode: str = "alltoall"):
+        """Measured wire traffic of this plan's exchanges — the runtime
+        counterpart of ``predicted_metrics`` (bytes per device per layer,
+        counted on the executed send/recv tables; DESIGN.md §7). ``cfg``
+        (a GNNConfig) supplies per-layer feature dims; without it a single
+        input-dim layer is assumed. Returns a
+        ``repro.distributed.traffic.TrafficReport``."""
+        from repro.distributed.traffic import measure_execution
+        return measure_execution(self, cfg=cfg, mode=mode)
 
 
 def plan_execution(g: Graph, setting: str = "centralized",
                    backend: str = "jnp", sample: int = 16,
                    n_clusters: int | None = None,
-                   seed: int = 0) -> ExecutionPlan:
+                   seed: int = 0,
+                   spokes_per_head: int = 4) -> ExecutionPlan:
     """Build the ExecutionPlan for one (setting, backend) combination.
 
     ``n_clusters`` defaults per setting: 1 (centralized), 8 (decentralized
-    — one per edge device), 4 (semi — cluster heads).
+    — one per edge device), 4 (semi — cluster heads, each fronting
+    ``spokes_per_head`` member edge devices). Halo/comm tables are pruned
+    to the ``sample``-reachable edges the kernels read.
     """
     assert setting in ("centralized", "decentralized", "semi"), setting
     if setting == "centralized":
@@ -291,7 +407,15 @@ def plan_execution(g: Graph, setting: str = "centralized",
         return ExecutionPlan(setting, backend, sample, 1, g, None, None,
                              g.features[None], nbr[None], wts[None])
     k = n_clusters or (8 if setting == "decentralized" else 4)
-    part = partition(g, k, seed=seed)
+    if setting == "semi":
+        hier = hier_partition(g, k, nodes_per_region=spokes_per_head,
+                              sample=sample, seed=seed)
+        sub = build_local_subgraphs(g, hier.region, sample)
+        feats = gather_spoke_features(g, hier)
+        return ExecutionPlan(setting, backend, sample, k, g, hier.region,
+                             sub, feats, sub.neighbors, sub.weights,
+                             hier=hier)
+    part = partition(g, k, seed=seed, sample=sample)
     sub = build_local_subgraphs(g, part, sample)
     feats = gather_features(g, part)
     return ExecutionPlan(setting, backend, sample, k, g, part, sub,
@@ -337,24 +461,33 @@ def rebalance(g: Graph, part: Partition, latency: np.ndarray,
             moved += 1
             if moved >= budget:
                 break
-    # rebuild partition tables from the adjusted assignment
-    return _from_assignment(g, assignment, k)
+    # rebuild partition tables from the adjusted assignment, keeping the
+    # original tables' sample pruning
+    return _from_assignment(g, assignment, k, sample=part.sample)
 
 
-def _from_assignment(g: Graph, assignment: np.ndarray, k: int) -> Partition:
-    """Build full Partition tables from a given node->cluster assignment."""
+def _from_assignment(g: Graph, assignment: np.ndarray, k: int,
+                     sample: int | None = None,
+                     self_loops: bool = True) -> Partition:
+    """Build full Partition tables from a given node->cluster assignment.
+
+    Halo and comm tables are restricted to ``sample``-reachable edges (see
+    ``_sample_edge_mask``); ``comm_volume[i, j]`` counts the *unique* remote
+    rows i needs from j — the feature rows an alltoall exchange ships, so
+    measured traffic and tabulated e_ij agree by construction."""
     members = [np.nonzero(assignment == c)[0].astype(np.int32)
                for c in range(k)]
     n_max = max(max(len(m) for m in members), 1)
     halos, comm = [], np.zeros((k, k), np.int64)
+    used = _sample_edge_mask(g, sample, self_loops)
     dst_cluster = assignment[np.repeat(np.arange(g.n_nodes),
                                        np.diff(g.indptr))]
     src_cluster = assignment[g.indices]
     for c in range(k):
-        mask = (dst_cluster == c) & (src_cluster != c)
+        mask = used & (dst_cluster == c) & (src_cluster != c)
         remote = np.unique(g.indices[mask])
         halos.append(remote.astype(np.int32))
-        pairs, counts = np.unique(src_cluster[mask], return_counts=True)
+        pairs, counts = np.unique(assignment[remote], return_counts=True)
         comm[c, pairs] = counts
     h_max = max(max((len(h) for h in halos), default=0), 1)
     local_nodes = np.full((k, n_max), -1, np.int32)
@@ -367,4 +500,4 @@ def _from_assignment(g: Graph, assignment: np.ndarray, k: int) -> Partition:
         halo_nodes[c, :len(halos[c])] = halos[c]
         halo_src[c, :len(halos[c])] = assignment[halos[c]]
     return Partition(assignment, k, local_nodes, local_mask,
-                     halo_nodes, halo_src, comm)
+                     halo_nodes, halo_src, comm, sample=sample)

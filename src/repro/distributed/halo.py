@@ -1,4 +1,4 @@
-"""Decentralized GNN runtime: shard_map over clusters + halo exchange.
+"""Decentralized + two-tier semi-decentralized GNN runtimes.
 
 One device per cluster (the paper's "edge device"). Each layer needs remote
 neighbor features (the paper's bidirectional e_ij communication volume); two
@@ -11,8 +11,21 @@ exchange strategies are provided:
     (precomputed send lists). Traffic matches the true boundary volume e_ij —
     the beyond-paper optimization (see EXPERIMENTS.md §Perf-GNN).
 
-All tables are padded to static shapes so a single compiled program serves
-every cluster (SPMD).
+Both strategies exist on both runtimes: the SPMD shard_map path (collectives
+over the cluster mesh axis) and the mesh-free *emulated* path (the identical
+dataflow as host-side gathers/transposes over the leading cluster axis — the
+single-process oracle, and the fallback when clusters outnumber devices).
+
+The **semi-decentralized** setting (paper §5, DESIGN.md §7) is a two-tier
+exchange over a ``HierPartition``:
+
+  * tier 0 — intra-region spoke->head gather: each region head assembles its
+    region feature table from its member spokes' tables (device-local in
+    SPMD, where a head and its spokes share a device; a real deployment
+    moves ``sum(spoke rows) * F`` bytes over the access link, which the
+    traffic accountant reports).
+  * tier 1 — head<->head boundary halo per layer, identical machinery to the
+    decentralized exchange but over the region-level partition.
 
 The per-device layer honors ``cfg.backend``: the composed ``jnp``/``pallas``
 paths run aggregation then the feature transform, ``fused`` runs both stages
@@ -31,10 +44,12 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.partition import Partition
+from repro.core.partition import HierPartition, Partition
 from repro.kernels.crossbar_mvm import crossbar_matmul_signed_ref
 from repro.kernels.csr_aggregate import aggregate, csr_aggregate_ref
 from repro.kernels.fused_layer import fused_gnn_layer
+
+EXCHANGE_MODES = ("allgather", "alltoall")
 
 
 @dataclasses.dataclass
@@ -118,6 +133,35 @@ def _layer_step(table, nbr, wts, layer, cfg, act: bool):
     return jax.nn.relu(x) if act else x
 
 
+def _plan_consts(plan: HaloPlan) -> dict:
+    return jax.tree.map(
+        jnp.asarray,
+        dict(src_c=plan.src_cluster, src_s=plan.src_slot,
+             hmask=plan.halo_mask.astype(np.float32),
+             send_slot=plan.send_slot,
+             send_mask=plan.send_mask.astype(np.float32),
+             recv_to_halo=plan.recv_to_halo,
+             recv_mask=plan.recv_mask.astype(np.float32)))
+
+
+def _spmd_layers(params, x, nbr, wts, cfg, t, mode, h_max, axis):
+    """Per-device layer loop shared by the decentralized and semi SPMD
+    forwards. ``t``: per-device exchange tables (leading axis stripped)."""
+    n_layers = len(params)
+    for i, layer in enumerate(params):
+        if mode == "allgather":
+            halo = _exchange_allgather(x, t["src_c"], t["src_s"],
+                                       t["hmask"], axis)
+        else:
+            halo = _exchange_alltoall(x, t["send_slot"], t["send_mask"],
+                                      t["recv_to_halo"], t["recv_mask"],
+                                      h_max, axis)
+        table = jnp.concatenate([x, halo], axis=0)      # [n_max+h_max, F]
+        act = i < n_layers - 1 or cfg.final_activation
+        x = _layer_step(table, nbr, wts, layer, cfg, act)
+    return x
+
+
 def make_decentralized_forward(mesh, cfg, plan: HaloPlan, n_max: int,
                                mode: str = "alltoall", axis: str = "data"):
     """Build the SPMD decentralized GNN forward for a given mesh/plan.
@@ -127,75 +171,178 @@ def make_decentralized_forward(mesh, cfg, plan: HaloPlan, n_max: int,
       nbr/wts [K, n_max, S]      device-local padded subgraph
     Returns [K, n_max, out_dim] embeddings for owned nodes.
     """
+    assert mode in EXCHANGE_MODES, mode
     h_max = plan.src_cluster.shape[1]
-    consts = jax.tree.map(
-        jnp.asarray,
-        dict(src_c=plan.src_cluster, src_s=plan.src_slot,
-             hmask=plan.halo_mask.astype(jnp.float32),
-             send_slot=plan.send_slot, send_mask=plan.send_mask,
-             recv_to_halo=plan.recv_to_halo, recv_mask=plan.recv_mask))
+    consts = _plan_consts(plan)
+    names = tuple(consts)
 
-    def device_fn(params, feats, nbr, wts, src_c, src_s, hmask,
-                  send_slot, send_mask, recv_to_halo, recv_mask):
-        x = feats[0]                                   # [n_max, F]
-        nbr, wts = nbr[0], wts[0]
-        n_layers = len(params)
-        for i, layer in enumerate(params):
-            if mode == "allgather":
-                halo = _exchange_allgather(x, src_c[0], src_s[0], hmask[0],
-                                           axis)
-            else:
-                halo = _exchange_alltoall(x, send_slot[0], send_mask[0],
-                                          recv_to_halo[0], recv_mask[0],
-                                          h_max, axis)
-            table = jnp.concatenate([x, halo], axis=0)  # [n_max+h_max, F]
-            act = i < n_layers - 1 or cfg.final_activation
-            x = _layer_step(table, nbr, wts, layer, cfg, act)
+    def device_fn(params, feats, nbr, wts, *tables):
+        t = {n: v[0] for n, v in zip(names, tables)}
+        x = _spmd_layers(params, feats[0], nbr[0], wts[0], cfg, t, mode,
+                         h_max, axis)
         return x[None]
 
     shard = P(axis)
     fn = shard_map(
         device_fn, mesh=mesh,
-        in_specs=(P(), shard, shard, shard, shard, shard, shard,
-                  shard, shard, shard, shard),
+        in_specs=(P(),) + (shard,) * (3 + len(names)),
         out_specs=shard,
         check_rep=False)
 
     @jax.jit
     def forward(params, feats, nbr, wts):
-        return fn(params, feats, nbr, wts, consts["src_c"], consts["src_s"],
-                  consts["hmask"], consts["send_slot"], consts["send_mask"],
-                  consts["recv_to_halo"], consts["recv_mask"])
+        return fn(params, feats, nbr, wts, *(consts[n] for n in names))
 
     return forward
 
 
-def make_emulated_forward(cfg, plan: HaloPlan):
+def _emulated_exchange(x, t, mode, h_max):
+    """Host-side halo exchange across the leading cluster axis — the
+    collective-free twin of ``_exchange_allgather``/``_exchange_alltoall``.
+
+    ``allgather`` picks each halo row straight out of the stacked owned
+    tables; ``alltoall`` routes through the same send/recv tables as the
+    SPMD collective (send -> axis transpose -> masked scatter), so the
+    emulated path exercises the exact tables the wire traffic is billed on.
+    Both return identical halos ([K, h_max, F]).
+    """
+    if mode == "allgather":
+        return x[t["src_c"], t["src_s"]] * t["hmask"][..., None]
+    k = x.shape[0]
+    dev = jnp.arange(k)[:, None, None]
+    send = x[dev, t["send_slot"]] * t["send_mask"][..., None]  # [K,K,s_max,F]
+    recv = jnp.swapaxes(send, 0, 1)           # recv[c, j] = send[j, c]
+    halo = jnp.zeros((k, h_max, x.shape[-1]), x.dtype)
+    return halo.at[dev, t["recv_to_halo"]].add(
+        recv * t["recv_mask"][..., None])
+
+
+def _emulated_layers(params, x, nbr, wts, cfg, t, mode, h_max):
+    k = x.shape[0]
+    n_layers = len(params)
+    for i, layer in enumerate(params):
+        halo = _emulated_exchange(x, t, mode, h_max)    # [K, h_max, F]
+        table = jnp.concatenate([x, halo], axis=1)      # [K, n_max+h_max, F]
+        act = i < n_layers - 1 or cfg.final_activation
+        x = jnp.stack([
+            _layer_step(table[c], nbr[c], wts[c], layer, cfg, act)
+            for c in range(k)])
+    return x
+
+
+def make_emulated_forward(cfg, plan: HaloPlan, mode: str = "allgather"):
     """Mesh-free decentralized forward: the same per-cluster dataflow and
     halo exchange as ``make_decentralized_forward``, but with the exchange
-    realized as a host-side gather across the leading cluster axis instead
-    of a collective. Used when the cluster count exceeds the device count
-    (e.g. a 16-cluster semi-decentralized plan on a 1-CPU test host) and as
-    the single-process oracle for the SPMD path.
+    realized host-side across the leading cluster axis instead of as a
+    collective (``_emulated_exchange`` — both ``allgather`` and
+    ``alltoall`` route identically to the SPMD modes). Used when the
+    cluster count exceeds the device count and as the single-process oracle
+    for the SPMD path.
 
     feats/nbr/wts: [K, n_max, {F,S}]. Returns [K, n_max, out_dim].
     """
-    src_c = jnp.asarray(plan.src_cluster)
-    src_s = jnp.asarray(plan.src_slot)
-    hmask = jnp.asarray(plan.halo_mask.astype(np.float32))
+    assert mode in EXCHANGE_MODES, mode
+    h_max = plan.src_cluster.shape[1]
+    consts = _plan_consts(plan)
 
     @jax.jit
     def forward(params, feats, nbr, wts):
-        x = feats                                   # [K, n_max, F]
-        k = x.shape[0]
-        n_layers = len(params)
-        for i, layer in enumerate(params):
-            halo = x[src_c, src_s] * hmask[..., None]   # [K, h_max, F]
-            table = jnp.concatenate([x, halo], axis=1)  # [K, n_max+h_max, F]
-            act = i < n_layers - 1 or cfg.final_activation
-            x = jnp.stack([
-                _layer_step(table[c], nbr[c], wts[c], layer, cfg, act)
-                for c in range(k)])
-        return x
+        return _emulated_layers(params, feats, nbr, wts, cfg, consts, mode,
+                                h_max)
+
+    return forward
+
+
+@dataclasses.dataclass
+class TwoTierPlan:
+    """Static two-tier semi-decentralized exchange plan (DESIGN.md §7).
+
+    ``region`` drives the tier-1 head<->head halo; the gather tables drive
+    the tier-0 spoke->head assembly of each region's feature table.
+    """
+    region: HaloPlan
+    gather_spoke: np.ndarray   # [R, n_max] spoke owning each region row
+    gather_slot: np.ndarray    # [R, n_max] slot in that spoke's table
+    gather_mask: np.ndarray    # [R, n_max] bool (valid region rows)
+    n_max: int
+
+    @property
+    def h_max(self) -> int:
+        return self.region.src_cluster.shape[1]
+
+
+def build_two_tier_plan(hier: HierPartition) -> TwoTierPlan:
+    return TwoTierPlan(build_halo_plan(hier.region), hier.gather_spoke,
+                       hier.gather_slot, hier.region.local_mask,
+                       hier.region.n_max)
+
+
+def _tier0_consts(plan: TwoTierPlan) -> dict:
+    return dict(gspoke=jnp.asarray(plan.gather_spoke),
+                gslot=jnp.asarray(plan.gather_slot),
+                gmask=jnp.asarray(plan.gather_mask.astype(np.float32)))
+
+
+def make_semi_forward(mesh, cfg, plan: TwoTierPlan,
+                      mode: str = "alltoall", axis: str = "data"):
+    """SPMD two-tier semi-decentralized forward (one device per head).
+
+    Inputs (sharded on the leading region axis over ``axis``):
+      spoke_feats [R, P, m_max, F_in]  per-spoke feature tables
+      nbr/wts     [R, n_max, S]        region-local padded subgraph
+    Tier 0 assembles the head's region table from its co-located spokes
+    (device-local gather — the access-link upload is billed by the traffic
+    accountant, not moved over the mesh); tier 1 runs the per-layer
+    head<->head halo exchange collective. Returns [R, n_max, out_dim].
+    """
+    assert mode in EXCHANGE_MODES, mode
+    h_max = plan.h_max
+    consts = dict(_tier0_consts(plan), **_plan_consts(plan.region))
+    names = tuple(consts)
+
+    def device_fn(params, spoke_feats, nbr, wts, *tables):
+        t = {n: v[0] for n, v in zip(names, tables)}
+        x = (spoke_feats[0][t["gspoke"], t["gslot"]]
+             * t["gmask"][:, None])                     # tier 0: [n_max, F]
+        x = _spmd_layers(params, x, nbr[0], wts[0], cfg, t, mode, h_max,
+                         axis)
+        return x[None]
+
+    shard = P(axis)
+    fn = shard_map(
+        device_fn, mesh=mesh,
+        in_specs=(P(),) + (shard,) * (3 + len(names)),
+        out_specs=shard,
+        check_rep=False)
+
+    @jax.jit
+    def forward(params, spoke_feats, nbr, wts):
+        return fn(params, spoke_feats, nbr, wts,
+                  *(consts[n] for n in names))
+
+    return forward
+
+
+def make_emulated_semi_forward(cfg, plan: TwoTierPlan,
+                               mode: str = "allgather"):
+    """Mesh-free two-tier semi forward — the single-process oracle for
+    ``make_semi_forward`` (same tier-0 gather tables, same tier-1 exchange
+    via ``_emulated_exchange``).
+
+    spoke_feats: [R, P, m_max, F]; nbr/wts: [R, n_max, S] region-local.
+    Returns [R, n_max, out_dim].
+    """
+    assert mode in EXCHANGE_MODES, mode
+    h_max = plan.h_max
+    t0 = _tier0_consts(plan)
+    consts = _plan_consts(plan.region)
+
+    @jax.jit
+    def forward(params, spoke_feats, nbr, wts):
+        r = spoke_feats.shape[0]
+        x = (spoke_feats[jnp.arange(r)[:, None], t0["gspoke"], t0["gslot"]]
+             * t0["gmask"][..., None])                  # tier 0: [R,n_max,F]
+        return _emulated_layers(params, x, nbr, wts, cfg, consts, mode,
+                                h_max)
 
     return forward

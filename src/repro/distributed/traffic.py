@@ -1,0 +1,112 @@
+"""Measured communication-volume accounting for ExecutionPlans.
+
+``ExecutionPlan.predicted_metrics`` prices a setting with the paper's
+Eqs. 4/5; this module reports what the runtime's exchanges actually move:
+rows and bytes per device per layer, counted on the *executed* send/recv
+tables (the very tables ``distributed.halo`` hands to the collectives /
+emulated exchange), at the runtime's padded shapes. "Measured" therefore
+means derived from the execution plan's wire schedule, not estimated from
+graph statistics — for the ``alltoall`` mode the per-pair row counts equal
+the pruned ``Partition.comm_volume`` e_ij by construction, which is the
+predicted-vs-executed validation loop ``benchmarks/semi_runtime.py`` closes
+(DESIGN.md §7, EXPERIMENTS.md §Semi-runtime).
+
+Tier structure:
+
+  * decentralized — one tier: per-layer halo exchange rows between peers.
+  * semi          — tier 0: each spoke uploads its owned feature rows to its
+    region head once per inference (the input features); tier 1: per-layer
+    head<->head halo rows, identical accounting to decentralized but over
+    the region partition.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+ITEMSIZE = 4  # float32 features on the wire
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficReport:
+    """Measured wire traffic of one ExecutionPlan.
+
+    ``tier1_rows[i, j]`` is the number of feature rows device i *receives*
+    from peer j in one halo exchange (one exchange per GNN layer);
+    ``tier0_rows[r, p]`` is the number of rows spoke p of region r uploads
+    to its head (semi only — empty [0, 0] otherwise). Bytes follow from the
+    per-layer feature dims: tier 0 moves input features once, tier 1 moves
+    the layer's input dim every layer.
+    """
+    setting: str
+    mode: str
+    layer_dims: tuple          # feature dim entering each layer's exchange
+    tier0_rows: np.ndarray     # [R, P] int64
+    tier1_rows: np.ndarray     # [K, K] int64
+    itemsize: int = ITEMSIZE
+
+    @property
+    def n_devices(self) -> int:
+        return self.tier1_rows.shape[0]
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_dims)
+
+    def tier0_bytes(self) -> np.ndarray:
+        """[R, P] bytes each spoke uploads (input features, once)."""
+        f = self.layer_dims[0] if self.layer_dims else 0
+        return self.tier0_rows * f * self.itemsize
+
+    def tier1_bytes(self) -> np.ndarray:
+        """[L, K] bytes each device receives per layer."""
+        dims = np.asarray(self.layer_dims, np.int64)
+        per_dev = self.tier1_rows.sum(axis=1)           # rows/exchange
+        return dims[:, None] * per_dev[None, :] * self.itemsize
+
+    def total_bytes(self) -> int:
+        return int(self.tier0_bytes().sum() + self.tier1_bytes().sum())
+
+    def summary(self) -> str:
+        t0 = int(self.tier0_bytes().sum())
+        t1 = int(self.tier1_bytes().sum())
+        return (f"{self.setting}/{self.mode}: tier0 {t0 / 1e6:.3f} MB "
+                f"(once), tier1 {t1 / 1e6:.3f} MB over {self.n_layers} "
+                f"layers, total {(t0 + t1) / 1e6:.3f} MB")
+
+
+def exchange_rows(plan, mode: str, n_max: int) -> np.ndarray:
+    """[K, K] rows device i receives from peer j in one halo exchange.
+
+    ``plan`` is a ``distributed.halo.HaloPlan``. ``allgather`` ships every
+    peer's full padded table; ``alltoall`` ships exactly the send-list rows
+    (== the pruned comm_volume e_ij).
+    """
+    k = plan.src_cluster.shape[0]
+    if mode == "allgather":
+        rows = np.full((k, k), n_max, np.int64)
+        np.fill_diagonal(rows, 0)
+        return rows
+    assert mode == "alltoall", mode
+    return plan.recv_mask.sum(axis=2).astype(np.int64)
+
+
+def measure_execution(plan, cfg=None, mode: str = "alltoall") -> TrafficReport:
+    """Build the TrafficReport for an ExecutionPlan (any setting).
+
+    ``cfg`` (a GNNConfig) supplies the per-layer feature dims; without it a
+    single exchange at the graph's input feature dim is assumed.
+    """
+    from repro.distributed.halo import build_halo_plan
+    dims = (tuple(cfg.dims[:-1]) if cfg is not None
+            else (plan.graph.feature_len,))
+    no_spokes = np.zeros((0, 0), np.int64)
+    if plan.setting == "centralized":
+        return TrafficReport(plan.setting, mode, dims, no_spokes,
+                             np.zeros((1, 1), np.int64))
+    halo_plan = build_halo_plan(plan.part)
+    tier1 = exchange_rows(halo_plan, mode, plan.part.n_max)
+    tier0 = (plan.hier.spoke_mask.sum(axis=2).astype(np.int64)
+             if plan.setting == "semi" else no_spokes)
+    return TrafficReport(plan.setting, mode, dims, tier0, tier1)

@@ -1,0 +1,18 @@
+"""Shared platform-aware ``interpret`` default for every Pallas kernel.
+
+All kernels take ``interpret: bool | None = None``. ``None`` resolves at
+trace time to "interpret everywhere except a real TPU": CPU/GPU hosts (the
+tier-1 CI) get the Pallas interpreter, a TPU gets the compiled kernel —
+instead of the old hard-coded ``True`` that silently ran every kernel
+interpreted on real hardware. Pass an explicit bool to override (e.g.
+``interpret=True`` on TPU to debug a kernel).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._interpret import resolve_interpret
+
 
 def _kernel(ci_ref, q_ref, match_ref, count_ref):
     j = pl.program_id(1)
@@ -30,11 +32,12 @@ def _kernel(ci_ref, q_ref, match_ref, count_ref):
 
 @functools.partial(jax.jit, static_argnames=("bq", "be", "interpret"))
 def cam_search(ci: jax.Array, queries: jax.Array, bq: int = 8, be: int = 128,
-               interpret: bool = True):
+               interpret: bool | None = None):
     """ci: [E] int32 (E % be == 0); queries: [Q] int32 (Q % bq == 0).
 
     Returns (match [Q, E] int8, counts [Q, 1] int32).
     """
+    interpret = resolve_interpret(interpret)
     e, = ci.shape
     q, = queries.shape
     assert e % be == 0 and q % bq == 0, (e, be, q, bq)

@@ -12,7 +12,7 @@ from .ref import cam_search_ref, cam_scan_ref
 
 @functools.partial(jax.jit, static_argnames=("backend", "bq", "be", "interpret"))
 def search(ci: jax.Array, queries: jax.Array, backend: str = "jnp",
-           bq: int = 8, be: int = 128, interpret: bool = True):
+           bq: int = 8, be: int = 128, interpret: bool | None = None):
     """Match queries against the CSR column-index array.
 
     Returns (match [Q, E] int8, counts [Q] int32). Pads E/Q internally; pad

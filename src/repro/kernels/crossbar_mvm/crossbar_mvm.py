@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._interpret import resolve_interpret
 from .ref import CrossbarNumerics
 
 
@@ -50,7 +51,7 @@ def _kernel(xq_ref, wq_ref, out_ref, *, in_bits: int, adc_bits: int,
 def crossbar_matmul_quantized(xq: jax.Array, wq: jax.Array,
                               cfg: CrossbarNumerics,
                               bm: int = 128, bn: int = 128,
-                              interpret: bool = False) -> jax.Array:
+                              interpret: bool | None = None) -> jax.Array:
     """Bit-serial crossbar matmul on pre-quantized codes.
 
     xq: [M, K] uint32 input DAC codes (values < 2**in_bits)
@@ -58,6 +59,7 @@ def crossbar_matmul_quantized(xq: jax.Array, wq: jax.Array,
     K must be a multiple of cfg.rows_per_xbar; M of bm; N of bn.
     Returns the *integer-domain* accumulation [M, N] f32 (caller rescales).
     """
+    interpret = resolve_interpret(interpret)
     m, k = xq.shape
     k2, n = wq.shape
     assert k == k2 and k % cfg.rows_per_xbar == 0, (xq.shape, wq.shape, cfg)

@@ -33,7 +33,7 @@ def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
 def crossbar_matmul(x: jax.Array, w: jax.Array,
                     cfg: CrossbarNumerics = CrossbarNumerics(),
                     bm: int = 128, bn: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """y = x @ w through the crossbar numerics, via the Pallas kernel.
 
     x: [M, K] float (clipped to >= 0, as in the post-ReLU cores)
@@ -57,7 +57,7 @@ def crossbar_matmul(x: jax.Array, w: jax.Array,
 def crossbar_matmul_signed(x: jax.Array, w: jax.Array,
                            cfg: CrossbarNumerics = CrossbarNumerics(),
                            bm: int = 128, bn: int = 128,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool | None = None) -> jax.Array:
     """Signed-activation variant (two DAC passes, digital recombine)."""
     if cfg.ideal:
         return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import resolve_interpret
+
 
 def _kernel(nbr_ref, wts_ref, x_ref, out_ref):
     i = pl.program_id(0)
@@ -35,12 +37,14 @@ def _kernel(nbr_ref, wts_ref, x_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("bf", "interpret"))
 def csr_aggregate(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
-                  bf: int = 128, interpret: bool = True) -> jax.Array:
+                  bf: int = 128,
+                  interpret: bool | None = None) -> jax.Array:
     """Weighted neighbor-feature aggregation via scalar-prefetch gather.
 
     x: [N, F] float, F % bf == 0; neighbors: [Nd, S] int32; weights: [Nd, S].
     Returns z: [Nd, F] float32. Matches ``ref.csr_aggregate_ref`` exactly.
     """
+    interpret = resolve_interpret(interpret)
     n, f = x.shape
     nd, s = neighbors.shape
     assert f % bf == 0, (f, bf)

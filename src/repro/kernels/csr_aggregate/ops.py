@@ -19,7 +19,7 @@ from .ref import csr_aggregate_ref
 @functools.partial(jax.jit, static_argnames=("backend", "bf", "interpret"))
 def aggregate(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
               backend: str = "jnp", bf: int = 128,
-              interpret: bool = True) -> jax.Array:
+              interpret: bool | None = None) -> jax.Array:
     if backend == "jnp":
         return csr_aggregate_ref(x, neighbors, weights)
     assert backend == "pallas", backend

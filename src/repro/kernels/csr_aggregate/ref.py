@@ -29,17 +29,28 @@ def csr_aggregate_ref(x: jax.Array, neighbors: jax.Array,
 
 
 def pad_neighbors(indptr, indices, edge_weights, sample: int,
-                  *, self_loops: bool = False):
+                  *, self_loops: bool = False, self_loop_weight=None):
     """Host-side CSR -> padded neighbor sample conversion (numpy, not jitted).
 
     Deterministic: takes the first ``sample`` neighbors of each node (the
     paper's deterministic fixed-size uniform mapping); pads with index 0 /
     weight 0. Returns (neighbors [N, S] int32, weights [N, S] float32).
+
+    ``self_loop_weight`` (scalar or [N] array) is the weight of the implicit
+    self loop appended when ``self_loops=True``. It defaults to 1.0 (plain
+    ``A + I`` on unweighted graphs); a GCN-normalized graph must pass
+    ``1 / (d_i + 1)`` so the sample realizes the documented contract
+    ``A_hat = D^-1/2 (A + I) D^-1/2`` (see ``Graph.gcn_normalize``).
     """
     import numpy as np
     n = len(indptr) - 1
     nbr = np.zeros((n, sample), np.int32)
     wts = np.zeros((n, sample), np.float32)
+    if self_loop_weight is None:
+        self_loop_weight = np.ones(n, np.float32)
+    else:
+        self_loop_weight = np.broadcast_to(
+            np.asarray(self_loop_weight, np.float32), (n,))
     for i in range(n):
         lo, hi = int(indptr[i]), int(indptr[i + 1])
         take = min(hi - lo, sample - (1 if self_loops else 0))
@@ -48,5 +59,5 @@ def pad_neighbors(indptr, indices, edge_weights, sample: int,
                          if edge_weights is not None else 1.0)
         if self_loops:
             nbr[i, take] = i
-            wts[i, take] = 1.0
+            wts[i, take] = self_loop_weight[i]
     return nbr, wts

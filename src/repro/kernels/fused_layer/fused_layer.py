@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import resolve_interpret
 from repro.kernels.crossbar_mvm.ref import CrossbarNumerics
 
 
@@ -140,12 +141,13 @@ def _gather_spec(bf: int):
                    static_argnames=("relu", "interpret"))
 def fused_ideal_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
                       w: jax.Array, b: jax.Array, *, relu: bool = False,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """act((A_hat @ X) @ W + b) in one kernel, ideal float numerics.
 
     x: [N, F]; neighbors/weights: [Nd, S]; w: [F, H]; b: [H].
     Returns [Nd, H] float32. Z never touches HBM.
     """
+    interpret = resolve_interpret(interpret)
     n, f = x.shape
     nd, n_s = neighbors.shape
     f2, h = w.shape
@@ -172,12 +174,13 @@ def fused_ideal_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
 
 @functools.partial(jax.jit, static_argnames="interpret")
 def fused_zmax(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
-               *, interpret: bool = True) -> jax.Array:
+               *, interpret: bool | None = None) -> jax.Array:
     """Per-node (max(z, 0), max(-z, 0)) of Z = A_hat @ X, Z kept in VMEM.
 
     Returns [Nd, 2] float32 — the scale pass of the bit-accurate fused layer
     (HBM write volume Nd*2 instead of Nd*F).
     """
+    interpret = resolve_interpret(interpret)
     n, f = x.shape
     nd, n_s = neighbors.shape
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -199,7 +202,7 @@ def fused_zmax(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
 def fused_quant_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
                       wq: jax.Array, b: jax.Array, scales: jax.Array,
                       cfg: CrossbarNumerics, *, relu: bool = False,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """Bit-accurate fused layer on pre-quantized conductances.
 
     x: [N, F] with F == n_k * cfg.rows_per_xbar (caller pads);
@@ -207,6 +210,7 @@ def fused_quant_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
     scales: [3] = (dac_scale_pos, dac_scale_neg, w_scale).
     Returns [Nd, H] float32 == act(crossbar_matmul_signed(Z, W) + b).
     """
+    interpret = resolve_interpret(interpret)
     n, f = x.shape
     nd, n_s = neighbors.shape
     f2, h = wq.shape

@@ -44,7 +44,7 @@ def fused_gnn_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
                     w: jax.Array, b: jax.Array,
                     cfg: CrossbarNumerics = CrossbarNumerics(ideal=True),
                     *, relu: bool = False, bf: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """act((A_hat @ X) @ W + b) with Z resident in VMEM throughout.
 
     x: [N, F]; neighbors: [Nd, S] int32; weights: [Nd, S]; w: [F, H]; b: [H].
@@ -86,7 +86,7 @@ def fused_gnn_forward(params: list, x: jax.Array, neighbors: jax.Array,
                       weights: jax.Array,
                       cfg: CrossbarNumerics = CrossbarNumerics(ideal=True),
                       *, final_activation: bool = False, bf: int = 128,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """Multi-layer fused driver: the full-graph GNN forward, one fused
     kernel launch per layer (plus the scale pass on the bit-accurate path).
 
@@ -111,7 +111,7 @@ def fused_gnn_forward_batched(params: list, x: jax.Array,
                                   ideal=True),
                               *, final_activation: bool = False,
                               bf: int = 128,
-                              interpret: bool = True) -> jax.Array:
+                              interpret: bool | None = None) -> jax.Array:
     """Batched multi-layer driver over a leading cluster/device axis.
 
     x: [K, N, F]; neighbors/weights: [K, N, S]. Each cluster runs the fused

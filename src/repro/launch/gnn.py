@@ -28,12 +28,14 @@ class GNNServer:
     """Embedding server: refresh via the plan's forward, serve row lookups."""
 
     def __init__(self, plan: ExecutionPlan, cfg: gnn.GNNConfig,
-                 params=None, mesh=None, seed: int = 0):
+                 params=None, mesh=None, seed: int = 0,
+                 mode: str = "alltoall"):
         self.plan = plan
         self.cfg = plan.gnn_config(cfg)
         self.params = params if params is not None else gnn.init_params(
             jax.random.key(seed), self.cfg)
-        self._forward = plan.make_forward(cfg, mesh=mesh)
+        self._forward = plan.make_forward(cfg, mesh=mesh, mode=mode)
+        self.mode = mode
         self.embeddings: np.ndarray | None = None
         self.refreshes = 0
 
@@ -61,7 +63,13 @@ def main() -> None:
     ap.add_argument("--dataset", default="collab")
     ap.add_argument("--scale", type=float, default=0.001)
     ap.add_argument("--clusters", type=int, default=0,
-                    help="default: one per device (decentralized) / 4 (semi)")
+                    help="default: one per device (decentralized) / "
+                         "4 heads (semi)")
+    ap.add_argument("--spokes", type=int, default=4,
+                    help="semi: member edge devices per cluster head")
+    ap.add_argument("--mode", default="alltoall",
+                    choices=("allgather", "alltoall"),
+                    help="halo-exchange strategy (semi: tier-1)")
     ap.add_argument("--sample", type=int, default=8)
     ap.add_argument("--hidden", type=int, default=64)
     ap.add_argument("--requests", type=int, default=64)
@@ -74,18 +82,22 @@ def main() -> None:
     plan = plan_execution(g, args.setting, backend=args.backend,
                           sample=args.sample,
                           n_clusters=None if args.setting == "centralized"
-                          else k)
+                          else k,
+                          spokes_per_head=args.spokes)
     mesh = (make_mesh((n_dev,), ("data",))
             if plan.n_clusters == n_dev and args.setting != "centralized"
             else None)
     cfg = gnn.GNNConfig(in_dim=g.feature_len, hidden_dims=(args.hidden,),
                         out_dim=16, sample=args.sample)
-    srv = GNNServer(plan, cfg, mesh=mesh)
+    srv = GNNServer(plan, cfg, mesh=mesh, mode=args.mode)
 
     dt = srv.refresh()
     print(f"plan: {args.setting}/{args.backend}, {g.n_nodes} nodes, "
           f"{plan.n_clusters} clusters on {n_dev} devices; "
           f"embedding refresh {dt * 1e3:.1f} ms")
+    if args.setting != "centralized":
+        print("measured traffic —",
+              plan.measured_traffic(cfg, mode=args.mode).summary())
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()

@@ -32,13 +32,13 @@ def test_forward_matches_dense_spmm(small_graph):
     nbr, wts = g.neighbor_sample(64)
     out = gnn.forward(params, jnp.asarray(g.features), jnp.asarray(nbr),
                       jnp.asarray(wts), cfg)
-    # dense reference with self loops
+    # dense A_hat = D^-1/2 (A+I) D^-1/2 (diagonal weight 1/(d_i+1))
     a = np.zeros((50, 50), np.float32)
     for i in range(50):
         for p in range(g.indptr[i], g.indptr[i + 1]):
             if p - g.indptr[i] < 63:
                 a[i, g.indices[p]] += g.edge_weight[p]
-        a[i, i] += 1.0
+        a[i, i] += 1.0 / (g.indptr[i + 1] - g.indptr[i] + 1)
     ref = (a @ g.features) @ np.asarray(params[0]["w"]) + np.asarray(params[0]["b"])
     np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
 

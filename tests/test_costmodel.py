@@ -101,3 +101,16 @@ def test_property_workload_scaled_sane(n, cs):
     base = predict("decentralized", s, workload_scaled=False)
     scaled = predict("decentralized", s, workload_scaled=True)
     assert scaled.t_compute >= base.t_compute * 0.99  # scaling adds passes
+
+
+def test_workload_sample_threads_through_predict():
+    """Regression: the configured neighbor-sample size must reach
+    per_node_latency — a larger sample means more aggregation-crossbar
+    passes in the workload-scaled mode (it used to be silently dropped)."""
+    s = GraphStats("w", 10_000, 10_000 * 600, 512, 600.0)
+    small = predict("decentralized", s, workload_scaled=True, sample=512)
+    big = predict("decentralized", s, workload_scaled=True, sample=2048)
+    assert big.compute.aggregation > small.compute.aggregation
+    # default (None) falls back to min(avg_cs, agg_rows) == 512 here
+    default = predict("decentralized", s, workload_scaled=True)
+    assert default.compute.aggregation == small.compute.aggregation

@@ -37,12 +37,19 @@ def test_partition_invariants(n, e, k, seed):
     assert (np.diag(part.comm_volume) == 0).all()
 
 
-def test_comm_volume_counts_boundary_edges():
+def test_comm_volume_counts_boundary_rows():
+    """e_ij counts the unique remote rows each cluster receives — exactly
+    what the alltoall exchange ships (and what traffic accounting bills)."""
     g = random_graph(40, 200, 4, seed=3)
     part = partition(g, 4)
     dst = np.repeat(np.arange(g.n_nodes), np.diff(g.indptr))
-    boundary = (part.assignment[dst] != part.assignment[g.indices]).sum()
-    assert part.comm_volume.sum() == boundary
+    boundary = part.assignment[dst] != part.assignment[g.indices]
+    rows = len({(int(part.assignment[d]), int(s))
+                for d, s in zip(dst[boundary], g.indices[boundary])})
+    assert part.comm_volume.sum() == rows
+    # per cluster, the e_ij row sum is that cluster's halo size
+    for c in range(4):
+        assert part.comm_volume[c].sum() == (part.halo_src[c] >= 0).sum()
 
 
 def test_halo_tables_point_to_owners():
