@@ -47,6 +47,8 @@ SHAPES = [
     (128, 512, 128, 4),
 ]
 
+SMOKE_ARGV = ["--iters", "1"]   # benchmarks.run --smoke path
+
 
 def _composed_layer(x, nbr, wts, w, b, cfg):
     z = aggregate(x, nbr, wts, backend="pallas")

@@ -1,0 +1,148 @@
+"""Crossbar-size study: mapper-derived vs Table-1-calibrated cost model.
+
+For crossbar geometry {paper, 64, 128, 256, 512} x setting {centralized,
+decentralized, semi} x the Table-2 datasets (+ the taxi calibration
+workload), compile the workload onto the inventory with ``repro.mapper``
+(DESIGN.md §8) and report:
+
+  * **T_cal / T_der** — calibrated (Eqs. 1-3, Table-1 constants) vs
+    mapper-derived compute latency. At the paper's own geometry (the
+    ``paper`` row) the two agree to ceil-rounding on the centralized and
+    decentralized settings — that is the cross-validation contract, and
+    ``--smoke`` asserts it within 10% on taxi. Away from the calibration
+    point they diverge: the calibrated path cannot see geometry at all
+    (its constants *are* the paper's geometry), so the divergence **is**
+    the measurement — e.g. small crossbars cut the per-pass ADC latency
+    but multiply pass rounds, and the semi setting's fractional-array
+    speed-ups round up to whole pass rounds.
+  * **E_der** — derived energy (tile passes x per-array read energy) next
+    to the calibrated ``P_compute x T_compute`` product.
+  * **util / occ** — weight-cell utilization of the occupied fx arrays
+    (padding + bit-slicing waste) and fx pass-schedule occupancy
+    (duplication/serialization efficiency).
+
+Usage:
+  PYTHONPATH=src python benchmarks/mapper_sweep.py            # full sweep
+  PYTHONPATH=src python benchmarks/mapper_sweep.py --smoke    # CI gate
+  (--csv for machine-readable rows, --iso-cells for the iso-silicon
+  comparison where array counts rescale to keep each core's cell budget)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import costmodel  # noqa: E402
+from repro.core.graph import TABLE2_DATASETS, TAXI_STATS  # noqa: E402
+from repro.mapper import XbarInventory  # noqa: E402
+from repro.mapper.compile import compile_mapping  # noqa: E402
+
+SIZES = (None, 64, 128, 256, 512)       # None == the paper's geometry
+SETTINGS = ("centralized", "decentralized", "semi")
+SMOKE_ARGV = ["--smoke"]
+
+
+def run_case(name: str, stats, setting: str, size: int | None,
+             layer_dims=(0, 128), n_clusters: int = 16,
+             iso_cells: bool = False) -> dict:
+    hw = costmodel.DEFAULT_HW
+    inv = XbarInventory.from_hardware(hw, setting)
+    if size is not None:
+        inv = inv.with_xbar_size(size, iso_cells=iso_cells)
+    dims = (max(stats.feature_len, 1), *layer_dims[1:])
+    cal = costmodel.predict(setting, stats, hw, n_clusters=n_clusters)
+    # one compilation per case; predict(mode="derived") is the same rollup
+    # (cross-checked in tests/test_mapper.py)
+    m = compile_mapping(dims, stats, hw, inv, setting, n_clusters)
+    t_der = m.t_compute
+    return dict(
+        dataset=name, setting=setting,
+        xbar="paper" if size is None else str(size),
+        t_cal=cal.t_compute, t_der=t_der,
+        ratio=t_der / max(cal.t_compute, 1e-30),
+        e_cal=cal.p_compute * cal.t_compute, e_der=m.energy_j,
+        util=m.weight_utilization, occ=m.array_utilization[2],
+        fx_arrays=m.weight_arrays, fx_copies=m.fx.copies,
+        fx_groups=m.fx.groups)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep + hard asserts (the CI gate)")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--iso-cells", action="store_true",
+                    help="rescale array counts to keep each core's total "
+                         "cell budget when re-geometrying")
+    ap.add_argument("--clusters", type=int, default=16,
+                    help="semi-setting cluster-head count")
+    args = ap.parse_args()
+
+    datasets = dict(TABLE2_DATASETS, taxi=TAXI_STATS)
+    if args.smoke:
+        datasets = {"taxi": TAXI_STATS, "cora": TABLE2_DATASETS["cora"]}
+    sizes = (None, 128, 256) if args.smoke else SIZES
+
+    cols = ("dataset", "setting", "xbar", "t_cal", "t_der", "ratio",
+            "e_cal", "e_der", "util", "occ")
+    if args.csv:
+        print(",".join(cols))
+    else:
+        print(f"{'dataset':12s} {'setting':14s} {'xbar':>6s} "
+              f"{'T_cal s':>10s} {'T_der s':>10s} {'der/cal':>8s} "
+              f"{'E_cal J':>10s} {'E_der J':>10s} {'util':>6s} {'occ':>6s}")
+
+    rows = []
+    for name, stats in datasets.items():
+        for setting in SETTINGS:
+            for size in sizes:
+                r = run_case(name, stats, setting, size,
+                             n_clusters=args.clusters,
+                             iso_cells=args.iso_cells)
+                rows.append(r)
+                if args.csv:
+                    print(",".join(
+                        f"{r[c]:.6e}" if isinstance(r[c], float) else str(r[c])
+                        for c in cols))
+                else:
+                    print(f"{r['dataset']:12s} {r['setting']:14s} "
+                          f"{r['xbar']:>6s} {r['t_cal']:10.3e} "
+                          f"{r['t_der']:10.3e} {r['ratio']:8.3f} "
+                          f"{r['e_cal']:10.3e} {r['e_der']:10.3e} "
+                          f"{r['util']:6.1%} {r['occ']:6.1%}")
+
+    if not args.smoke:
+        return 0
+    # the cross-validation contract: at the paper's geometry the derived
+    # rollup must reproduce the calibrated Table-1 taxi latencies (<10%)
+    # for both Table-1 settings; divergence is only legitimate away from
+    # the calibration point.
+    failures = []
+    for r in rows:
+        if (r["dataset"] == "taxi" and r["xbar"] == "paper"
+                and r["setting"] in ("centralized", "decentralized")):
+            if abs(r["ratio"] - 1.0) > 0.10:
+                failures.append(
+                    f"taxi/{r['setting']}@paper geometry: derived "
+                    f"{r['ratio']:.3f}x calibrated (contract: within 10%)")
+    settings_seen = {r["setting"] for r in rows}
+    sizes_seen = {r["xbar"] for r in rows} - {"paper"}
+    if len(sizes_seen) < 2 or len(settings_seen) < 3:
+        failures.append(f"sweep too small: sizes {sorted(sizes_seen)}, "
+                        f"settings {sorted(settings_seen)}")
+    if failures:
+        print("SMOKE FAILURES:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print(f"MAPPER_SWEEP_SMOKE_OK: derived matches calibrated Table-1 taxi "
+          f"latencies at the paper geometry; swept {len(sizes_seen)} "
+          f"crossbar sizes x {len(settings_seen)} settings x "
+          f"{len(datasets)} datasets")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

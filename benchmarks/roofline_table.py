@@ -2,11 +2,14 @@
 
 Reads every record the dry-run sweep appended and prints, per
 (arch x shape x mesh): the three roofline terms, the dominant one,
-MODEL_FLOPS/HLO_FLOPs, and per-device live bytes."""
+MODEL_FLOPS/HLO_FLOPs, and per-device live bytes. Renders the optimized
+sweep (results/dryrun_opt.jsonl, EXPERIMENTS.md §Perf) too when present."""
 from __future__ import annotations
 
 import json
 import os
+
+INFORMATIONAL = True    # a missing dry-run file is not a benchmark failure
 
 
 def load(path: str = "results/dryrun.jsonl") -> list:
@@ -26,11 +29,26 @@ def load(path: str = "results/dryrun.jsonl") -> list:
 
 def main(csv: bool = False, path: str = "results/dryrun.jsonl") -> int:
     recs = load(path)
+    opt = "results/dryrun_opt.jsonl"
+    if path == "results/dryrun.jsonl" and os.path.exists(opt):
+        # render the optimized sweep even when the baseline file is absent
+        if recs:
+            print("(paper-faithful baseline; optimized sweep follows)")
+            rc = _render(recs)
+        else:
+            print("no baseline dry-run records (results/dryrun.jsonl)")
+            rc = 0
+        print("\n--- optimized (EXPERIMENTS.md §Perf) ---")
+        return rc + main(csv, path=opt)
     if not recs:
         print("no dry-run records found — run "
               "`python -m repro.launch.dryrun --all --out "
               "results/dryrun.jsonl` first")
         return 1
+    return _render(recs)
+
+
+def _render(recs: list) -> int:
     recs.sort(key=lambda r: (r.get("arch", ""), r.get("shape", ""),
                              r.get("mesh", "")))
     print(f"{'arch':18s} {'shape':12s} {'mesh':8s} {'comp_ms':>9s} "

@@ -1,40 +1,106 @@
-"""Benchmark runner — one module per paper table/figure.
+"""Benchmark runner — auto-registers every benchmarks/ module with a main().
 
-  table1_taxi     Table 1 (taxi case study latency/power, both settings)
-  fig8_datasets   Fig. 8 breakdown + the ~790x / ~1400x headline averages
-  semi_sweep      beyond-paper semi-decentralized cluster sweep (paper §5)
-  kernels_bench   kernel micro-benchmarks
-  roofline_table  §Roofline render of results/dryrun.jsonl (if present)
+Discovery replaces the hand-kept list that drifted (fused_vs_composed and
+semi_runtime were never registered): any module in this package exposing a
+callable ``main() -> int`` is a benchmark. Module conventions:
+
+  * ``SMOKE_ARGV``      — argv the module's CLI gets under ``--smoke``
+    (e.g. ``["--smoke"]``, ``["--iters", "1"]``); modules without it run
+    their default path in both modes.
+  * ``INFORMATIONAL``   — nonzero return is reported but does not fail the
+    run (e.g. roofline_table when no dry-run file exists).
 
 ``python -m benchmarks.run`` runs everything and exits non-zero on any
-paper-validation mismatch."""
+paper-validation mismatch; ``--smoke`` runs every bench's smoke path (the
+CI gate — registry drift or bench breakage fails the build);
+``python -m benchmarks.run table1_taxi semi_sweep`` runs a subset.
+"""
 from __future__ import annotations
 
+import argparse
+import importlib
+import os
+import pkgutil
 import sys
 
-from benchmarks import (fig8_datasets, kernels_bench, roofline_table,
-                        semi_sweep, table1_taxi)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)   # `python benchmarks/run.py` == `-m` form
+
+import benchmarks  # noqa: E402
 
 
-def main() -> None:
+def discover(names: list | None = None) -> dict:
+    """name -> module for benchmarks/ modules exposing main().
+
+    ``names`` restricts discovery — and therefore the jax-heavy imports —
+    to that subset (in the given order); unknown names abort with the full
+    candidate list."""
+    candidates = sorted(i.name for i in
+                        pkgutil.iter_modules(benchmarks.__path__)
+                        if i.name != "run")
+    if names:
+        unknown = [n for n in names if n not in candidates]
+        if unknown:
+            sys.exit(f"unknown benchmark(s) {unknown}; "
+                     f"candidates: {candidates}")
+    registry = {}
+    for name in (names or candidates):
+        mod = importlib.import_module(f"benchmarks.{name}")
+        if callable(getattr(mod, "main", None)):
+            registry[name] = mod
+        elif names:
+            sys.exit(f"{name} is a library module (no main()); "
+                     f"candidates: {candidates}")
+    return registry
+
+
+def run_one(name: str, mod, smoke: bool) -> int:
+    """Run one benchmark under a controlled argv; returns its failure count."""
+    argv = [f"benchmarks/{name}.py"]
+    if smoke:
+        argv += list(getattr(mod, "SMOKE_ARGV", []))
+    saved = sys.argv
+    try:
+        sys.argv = argv
+        rc = int(mod.main() or 0)
+    finally:
+        sys.argv = saved
+    if rc and getattr(mod, "INFORMATIONAL", False):
+        print(f"({name} is informational — not counted as a failure)")
+        return 0
+    return rc
+
+
+def main(argv: list | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("modules", nargs="*",
+                    help="subset of registered benchmarks (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run every bench's smoke path (the CI gate)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registry and exit")
+    args = ap.parse_args(argv)
+
+    registry = discover(args.modules or None)
+    if args.list:
+        for name, mod in registry.items():
+            extras = []
+            if getattr(mod, "SMOKE_ARGV", None):
+                extras.append(f"smoke: {' '.join(mod.SMOKE_ARGV)}")
+            if getattr(mod, "INFORMATIONAL", False):
+                extras.append("informational")
+            print(f"{name:20s} {'(' + ', '.join(extras) + ')' if extras else ''}")
+        return
+
     failures = 0
-    for name, mod in (("table1_taxi", table1_taxi),
-                      ("fig8_datasets", fig8_datasets),
-                      ("semi_sweep", semi_sweep),
-                      ("kernels_bench", kernels_bench)):
-        print(f"\n===== {name} =====")
-        failures += mod.main()
-    import os
-    # roofline tables are informational here; a missing dry-run file is not
-    # a benchmark failure (the sweep is a separate, long-running step)
-    print("\n===== roofline_table (paper-faithful baseline) =====")
-    roofline_table.main()
-    if os.path.exists("results/dryrun_opt.jsonl"):
-        print("\n===== roofline_table (optimized — EXPERIMENTS.md §Perf) ====")
-        roofline_table.main(path="results/dryrun_opt.jsonl")
+    for name, mod in registry.items():
+        print(f"\n===== {name}{' (smoke)' if args.smoke else ''} =====")
+        failures += run_one(name, mod, args.smoke)
     if failures:
         sys.exit(f"{failures} benchmark validations failed")
-    print("\nall benchmark validations passed")
+    print(f"\nall {len(registry)} benchmark validations passed")
 
 
 if __name__ == "__main__":

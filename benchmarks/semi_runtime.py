@@ -38,6 +38,7 @@ from repro.core.partition import plan_execution  # noqa: E402
 
 DATASETS = ("taxi", "collab", "cora", "citeseer")
 HEADS = (2, 4, 8)
+SMOKE_ARGV = ["--smoke"]        # benchmarks.run --smoke path
 
 
 def run_case(name: str, scale: float, heads: int, sample: int,

@@ -141,12 +141,32 @@ def compute_latency(setting: Setting, stats: GraphStats,
                     hw: HardwareParams = DEFAULT_HW,
                     workload_scaled: bool = False,
                     n_clusters: int = 1,
-                    sample: int | None = None) -> CoreLatency:
+                    sample: int | None = None,
+                    mode: str = "calibrated",
+                    inventory=None,
+                    layer_dims: tuple | None = None) -> CoreLatency:
     """Eq. 2 (decentralized) / Eq. 3 (centralized) / semi (beyond-paper).
 
     ``sample`` is the runtime's configured neighbor-sample size; the
     workload-scaled mode uses it for the aggregation-core pass count
-    (``None`` falls back to the Table-2 ``avg_cs`` heuristic)."""
+    (``None`` falls back to the Table-2 ``avg_cs`` heuristic).
+
+    ``mode="derived"`` routes the compute latency through the crossbar
+    mapper (``repro.mapper``, DESIGN.md §8): tile counts, array allocation
+    and pass rounds are derived from first principles for the given
+    ``inventory`` (default: the setting's paper inventory) and
+    ``layer_dims`` (default: the calibration workload, one
+    ``feature_len -> 128`` layer). At the paper's geometry the two modes
+    agree to ceil-rounding (< 10%, cross-validated in tests); away from it
+    the derived mode is the only one that can answer."""
+    if mode not in ("calibrated", "derived"):
+        raise ValueError(f"unknown mode {mode!r}; "
+                         f"one of ('calibrated', 'derived')")
+    if mode == "derived":
+        from repro.mapper.compile import compile_mapping
+        dims = layer_dims or (max(stats.feature_len, 1), 128)
+        return compile_mapping(dims, stats, hw, inventory, setting,
+                               n_clusters, sample).core_latency()
     t = per_node_latency(stats, hw, workload_scaled, sample)
     if setting == "decentralized":
         return t
@@ -203,10 +223,20 @@ def power(setting: Setting, stats: GraphStats,
 def predict(setting: Setting, stats: GraphStats,
             hw: HardwareParams = DEFAULT_HW, workload_scaled: bool = False,
             n_clusters: int = 1, gnn_layers: int = 2,
-            sample: int | None = None) -> NetMetrics:
-    """Full Eq. 1 + Eq. 6 evaluation for one setting on one workload."""
+            sample: int | None = None,
+            mode: str = "calibrated",
+            inventory=None,
+            layer_dims: tuple | None = None) -> NetMetrics:
+    """Full Eq. 1 + Eq. 6 evaluation for one setting on one workload.
+
+    ``mode="calibrated"`` (default) prices compute from the Table-1
+    constants; ``mode="derived"`` compiles the workload onto the crossbar
+    ``inventory`` via ``repro.mapper`` and rolls up pass rounds (see
+    ``compute_latency``). The link model (Eqs. 4/5/7) is shared — crossbar
+    geometry does not move the radio."""
     comp = compute_latency(setting, stats, hw, workload_scaled, n_clusters,
-                           sample)
+                           sample, mode=mode, inventory=inventory,
+                           layer_dims=layer_dims)
     comm = communicate_latency(setting, stats, hw, n_clusters)
     p_comp, p_comm = power(setting, stats, hw, gnn_layers)
     return NetMetrics(setting, comp, comp.total, comm, p_comp, p_comm)

@@ -313,6 +313,7 @@ class ExecutionPlan:
     neighbors: np.ndarray           # [K, n_max, S] device-local sample
     weights: np.ndarray             # [K, n_max, S]
     hier: HierPartition | None = None   # set for setting == "semi"
+    mapping: object | None = None   # cached CompiledMapping (repro.mapper)
 
     def gnn_config(self, cfg):
         """Rebind a GNNConfig to this plan's backend/sample."""
@@ -370,13 +371,47 @@ class ExecutionPlan:
             full[self.part.local_nodes[c][m]] = out[c][m]
         return full
 
-    def predicted_metrics(self, workload_scaled: bool = False):
-        """Cost-model (Eqs. 1-7) prediction for this plan's setting."""
+    def predicted_metrics(self, workload_scaled: bool = False,
+                          mode: str = "calibrated", inventory=None,
+                          layer_dims: tuple | None = None):
+        """Cost-model (Eqs. 1-7) prediction for this plan's setting.
+
+        ``mode="derived"`` prices compute through the crossbar mapper
+        instead of the Table-1 calibration (DESIGN.md §8); ``inventory`` /
+        ``layer_dims`` are forwarded to it."""
         from repro.core import costmodel
         return costmodel.predict(
             self.setting, self.graph.stats("plan"),
             workload_scaled=workload_scaled, n_clusters=self.n_clusters,
-            sample=self.sample)
+            sample=self.sample, mode=mode, inventory=inventory,
+            layer_dims=layer_dims)
+
+    def compile_mapping(self, cfg=None, hw=None, inventory=None):
+        """Compile this plan's workload onto a crossbar inventory.
+
+        ``cfg`` (a GNNConfig, optional) supplies the layer dims — without
+        it the mapper prices the calibration workload (one
+        ``feature_len -> 128`` layer). The result is cached on
+        ``self.mapping`` and returned (a ``repro.mapper.CompiledMapping``:
+        per-layer tilings, array allocation, pass schedule, derived
+        latency/energy)."""
+        from repro.mapper.compile import compile_mapping
+        dims = (cfg.dims if cfg is not None
+                else (max(self.graph.feature_len, 1), 128))
+        self.mapping = compile_mapping(
+            dims, self.graph.stats("plan"), hw, inventory, self.setting,
+            self.n_clusters, self.sample)
+        return self.mapping
+
+    def mapping_report(self, cfg=None, hw=None, inventory=None) -> str:
+        """Human-readable report of the compiled hardware mapping (tile
+        shapes, padding, duplication/serialization, pass schedule, derived
+        latency/energy). Compiles on first use; recompiles when any
+        argument is given."""
+        if (self.mapping is None or cfg is not None or hw is not None
+                or inventory is not None):
+            self.compile_mapping(cfg, hw=hw, inventory=inventory)
+        return self.mapping.mapping_report()
 
     def measured_traffic(self, cfg=None, mode: str = "alltoall"):
         """Measured wire traffic of this plan's exchanges — the runtime

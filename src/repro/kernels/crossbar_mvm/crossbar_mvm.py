@@ -62,8 +62,18 @@ def crossbar_matmul_quantized(xq: jax.Array, wq: jax.Array,
     interpret = resolve_interpret(interpret)
     m, k = xq.shape
     k2, n = wq.shape
-    assert k == k2 and k % cfg.rows_per_xbar == 0, (xq.shape, wq.shape, cfg)
-    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    if k != k2:
+        raise ValueError(f"contraction mismatch: xq K={k} vs wq K={k2}")
+    for dim, size, mult in (("M", m, bm), ("K", k, cfg.rows_per_xbar),
+                            ("N", n, bn)):
+        if size % mult:
+            raise ValueError(
+                f"crossbar_matmul_quantized needs {dim} divisible by "
+                f"{mult} (one {'physical crossbar' if dim == 'K' else 'MXU block'}"
+                f" per grid step), got {dim}={size}. Pad to the grid from "
+                f"repro.mapper.tiling.padded_grid(M, K, N, rows_per_xbar, "
+                f"bm, bn) — the ops-layer crossbar_matmul does this for "
+                f"arbitrary shapes.")
     bk = cfg.rows_per_xbar
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(

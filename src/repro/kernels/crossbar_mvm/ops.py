@@ -1,8 +1,10 @@
 """Jitted public wrapper around the crossbar MVM Pallas kernel.
 
 Handles global DAC/weight quantization (a full-tensor max-reduction that can
-not live inside a block-local kernel), padding to block multiples, and the
-final de-quantization rescale, so that::
+not live inside a block-local kernel), padding to the mapper-emitted
+(bm, bk, bn) tile grid (``repro.mapper.tiling.padded_grid`` — any M/K/N is
+mappable; the kernel itself only ever sees divisible shapes), and the final
+de-quantization rescale, so that::
 
     crossbar_matmul(x, w, cfg)  ==  ref.crossbar_matmul_ref(x, w, cfg)
 
@@ -15,18 +17,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.mapper.tiling import padded_grid
+
 from .crossbar_mvm import crossbar_matmul_quantized
 from .ref import CrossbarNumerics, quantize_inputs, quantize_weights
-
-
-def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
-    size = a.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return a
-    widths = [(0, 0)] * a.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(a, widths)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "bm", "bn", "interpret"))
@@ -44,10 +38,11 @@ def crossbar_matmul(x: jax.Array, w: jax.Array,
                        preferred_element_type=jnp.float32)
     m, k = x.shape
     _, n = w.shape
+    grid = padded_grid(m, k, n, cfg.rows_per_xbar, bm=bm, bn=bn)
     xq, xs = quantize_inputs(x, cfg)
     wq, ws = quantize_weights(w, cfg)
-    xq = _pad_to(_pad_to(xq, 0, bm), 1, cfg.rows_per_xbar)
-    wq = _pad_to(_pad_to(wq, 0, cfg.rows_per_xbar), 1, bn)
+    xq = jnp.pad(xq, ((0, grid.m_pad - m), (0, grid.k_pad - k)))
+    wq = jnp.pad(wq, ((0, grid.k_pad - k), (0, grid.n_pad - n)))
     out = crossbar_matmul_quantized(xq, wq, cfg, bm=bm, bn=bn,
                                     interpret=interpret)
     return out[:m, :n] * (xs * ws)

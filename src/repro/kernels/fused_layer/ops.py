@@ -25,16 +25,18 @@ import jax.numpy as jnp
 
 from repro.kernels.crossbar_mvm.ref import (CrossbarNumerics,
                                             quantize_weights)
+from repro.mapper.tiling import padded_grid
+
 from .fused_layer import fused_ideal_layer, fused_quant_layer, fused_zmax
 
 
-def _pad_cols(a: jax.Array, mult: int) -> jax.Array:
-    pad = (-a.shape[-1]) % mult
+def _pad_cols(a: jax.Array, to: int) -> jax.Array:
+    pad = to - a.shape[-1]
     return jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)]) if pad else a
 
 
-def _pad_rows(a: jax.Array, mult: int) -> jax.Array:
-    pad = (-a.shape[0]) % mult
+def _pad_rows(a: jax.Array, to: int) -> jax.Array:
+    pad = to - a.shape[0]
     return jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)) if pad else a
 
 
@@ -54,25 +56,27 @@ def fused_gnn_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
     n, f = x.shape
     f2, h = w.shape
     assert f == f2, (x.shape, w.shape)
+    # the mapper emits the padded tile grid for either numerics path: K
+    # tiled into physical rows_per_xbar crossbars (bit-accurate) or into
+    # bf-lane MXU blocks (ideal), H lane-aligned to bf — arbitrary F/H map.
+    grid = padded_grid(n, f, h, bf if cfg.ideal else cfg.rows_per_xbar,
+                       bm=1, bn=bf)
     if cfg.ideal:
-        xp = _pad_cols(x, bf)
-        wp = _pad_cols(_pad_rows(w, bf), bf)
-        bp = _pad_cols(b[None], bf)[0]
+        xp = _pad_cols(x, grid.k_pad)
+        wp = _pad_cols(_pad_rows(w, grid.k_pad), grid.n_pad)
+        bp = _pad_cols(b[None], grid.n_pad)[0]
         out = fused_ideal_layer(xp, neighbors, weights, wp, bp,
                                 relu=relu, interpret=interpret)
         return out[:, :h]
-    # bit-accurate path: K must tile into physical crossbars of
-    # rows_per_xbar rows (zero-padded, exactly as the composed kernel pads
-    # its codes), H lane-aligned to bf.
-    xp = _pad_cols(x, cfg.rows_per_xbar)
+    xp = _pad_cols(x, grid.k_pad)
     zmax = fused_zmax(xp, neighbors, weights, interpret=interpret)
     # global DAC scales of max(Z,0) / max(-Z,0) — identical to
     # quantize_inputs() on the materialized Z of the composed path
     scale_pos = jnp.maximum(jnp.max(zmax[:, 0]), 1e-8) / cfg.in_levels
     scale_neg = jnp.maximum(jnp.max(zmax[:, 1]), 1e-8) / cfg.in_levels
     wq, w_scale = quantize_weights(w, cfg)
-    wqp = _pad_cols(_pad_rows(wq, cfg.rows_per_xbar), bf)
-    bp = _pad_cols(b[None], bf)[0]
+    wqp = _pad_cols(_pad_rows(wq, grid.k_pad), grid.n_pad)
+    bp = _pad_cols(b[None], grid.n_pad)[0]
     scales = jnp.stack([scale_pos, scale_neg, w_scale])
     out = fused_quant_layer(xp, neighbors, weights, wqp, bp, scales, cfg,
                             relu=relu, interpret=interpret)

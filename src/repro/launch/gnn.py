@@ -25,7 +25,14 @@ from repro.launch.mesh import make_mesh
 
 
 class GNNServer:
-    """Embedding server: refresh via the plan's forward, serve row lookups."""
+    """Embedding server: refresh via the plan's forward, serve row lookups.
+
+    Staleness is version-tracked: ``update_params`` / ``update_plan`` bump
+    ``self.version``, and ``query`` refreshes whenever the served
+    embeddings were computed at an older version (not only when they have
+    never been computed). Mutating ``self.params`` in place bypasses the
+    tracking — use the setters.
+    """
 
     def __init__(self, plan: ExecutionPlan, cfg: gnn.GNNConfig,
                  params=None, mesh=None, seed: int = 0,
@@ -34,10 +41,32 @@ class GNNServer:
         self.cfg = plan.gnn_config(cfg)
         self.params = params if params is not None else gnn.init_params(
             jax.random.key(seed), self.cfg)
+        self._mesh = mesh
         self._forward = plan.make_forward(cfg, mesh=mesh, mode=mode)
         self.mode = mode
         self.embeddings: np.ndarray | None = None
         self.refreshes = 0
+        self.version = 0            # params/graph generation counter
+        self._served_version = -1   # version the embeddings were built at
+
+    def update_params(self, params) -> None:
+        """Swap model parameters; served embeddings become stale."""
+        self.params = params
+        self.version += 1
+
+    def update_plan(self, plan: ExecutionPlan, cfg=None) -> None:
+        """Swap the execution plan (graph changed / repartitioned); rebuilds
+        the forward and marks served embeddings stale."""
+        cfg = cfg if cfg is not None else self.cfg
+        self.plan = plan
+        self.cfg = plan.gnn_config(cfg)
+        self._forward = plan.make_forward(cfg, mesh=self._mesh,
+                                          mode=self.mode)
+        self.version += 1
+
+    @property
+    def stale(self) -> bool:
+        return self.embeddings is None or self._served_version != self.version
 
     def refresh(self) -> float:
         """Recompute all node embeddings; returns wall-clock seconds."""
@@ -45,11 +74,12 @@ class GNNServer:
         out = jax.block_until_ready(self._forward(self.params))
         self.embeddings = self.plan.scatter(np.asarray(out))
         self.refreshes += 1
+        self._served_version = self.version
         return time.perf_counter() - t0
 
     def query(self, node_ids) -> np.ndarray:
         """Serve one batch of embedding lookups (refresh if stale)."""
-        if self.embeddings is None:
+        if self.stale:
             self.refresh()
         return self.embeddings[np.asarray(node_ids)]
 
@@ -74,6 +104,9 @@ def main() -> None:
     ap.add_argument("--hidden", type=int, default=64)
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--mapping", action="store_true",
+                    help="print the compiled crossbar mapping report "
+                         "(DESIGN.md §8)")
     args = ap.parse_args()
 
     g = dataset_like(args.dataset, scale=args.scale, seed=0).gcn_normalize()
@@ -113,6 +146,12 @@ def main() -> None:
     m = plan.predicted_metrics()
     print(f"cost model ({args.setting}): T_compute {m.t_compute:.3e} s, "
           f"T_comm {m.t_communicate:.3e} s, P {m.p_net * 1e3:.1f} mW")
+    mapping = plan.compile_mapping(cfg)
+    print(f"mapper-derived T_compute {mapping.t_compute:.3e} s "
+          f"({mapping.t_compute / max(m.t_compute, 1e-30):.2f}x calibrated); "
+          f"run with --mapping for the full report")
+    if args.mapping:
+        print(plan.mapping_report())    # reuses the cached mapping
     best, _ = costmodel.pick_setting(g.stats(args.dataset),
                                      n_clusters=plan.n_clusters)
     print(f"cost-model guideline for this graph: {best}")

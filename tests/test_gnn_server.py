@@ -1,0 +1,56 @@
+"""GNNServer staleness contract: ``query`` must refresh whenever the
+params/plan version moved, not only when embeddings were never computed
+(the docstring always promised "refresh if stale"; it used to refresh only
+on ``embeddings is None``)."""
+import numpy as np
+import jax
+
+from repro.core import gnn
+from repro.core.graph import random_graph
+from repro.core.partition import plan_execution
+from repro.launch.gnn import GNNServer
+
+
+def _server(seed=0, **plan_kw):
+    g = random_graph(40, 200, 24, seed=seed).gcn_normalize()
+    plan = plan_execution(g, plan_kw.pop("setting", "centralized"),
+                          sample=4, **plan_kw)
+    cfg = gnn.GNNConfig(in_dim=24, hidden_dims=(16,), out_dim=8, sample=4)
+    return GNNServer(plan, cfg, seed=seed), cfg, g
+
+
+def test_query_refreshes_on_param_update():
+    srv, cfg, _ = _server()
+    ids = np.arange(5)
+    first = srv.query(ids).copy()
+    assert srv.refreshes == 1
+    # same version: queries serve the cached embeddings, no refresh
+    srv.query(ids)
+    assert srv.refreshes == 1 and not srv.stale
+    # new params: stale -> next query refreshes and the embeddings move
+    new_params = gnn.init_params(jax.random.key(123), srv.cfg)
+    srv.update_params(new_params)
+    assert srv.stale
+    second = srv.query(ids)
+    assert srv.refreshes == 2
+    assert not np.allclose(first, second)
+
+
+def test_query_refreshes_on_plan_update():
+    srv, cfg, _ = _server()
+    srv.query(np.arange(3))
+    assert srv.refreshes == 1
+    g2 = random_graph(40, 200, 24, seed=7).gcn_normalize()
+    srv.update_plan(plan_execution(g2, "centralized", sample=4), cfg)
+    assert srv.stale
+    srv.query(np.arange(3))
+    assert srv.refreshes == 2 and not srv.stale
+
+
+def test_explicit_refresh_clears_staleness():
+    srv, _, _ = _server()
+    srv.update_params(srv.params)      # bump version before any serve
+    srv.refresh()
+    assert not srv.stale
+    srv.query(np.arange(2))
+    assert srv.refreshes == 1          # query reused the explicit refresh

@@ -90,6 +90,42 @@ def test_property_oracle_kernel_equivalence(m, k, n, seed):
                                rtol=1e-5, atol=1e-4)
 
 
+def test_quantized_kernel_rejects_nondivisible_shapes():
+    """Regression: ``crossbar_matmul_quantized`` used to assert (or, under
+    ``python -O``, crash deep in Pallas) on non-divisible M/K/N. It must
+    raise an early ValueError naming the offending dim and pointing at the
+    mapper API that produces valid shapes."""
+    from repro.kernels.crossbar_mvm.crossbar_mvm import (
+        crossbar_matmul_quantized)
+    cfg = CrossbarNumerics(rows_per_xbar=128)
+    ok = dict(m=128, k=256, n=128)
+
+    def codes(m, k, n):
+        return (jnp.zeros((m, k), jnp.uint32), jnp.zeros((k, n), jnp.float32))
+
+    # each dim individually non-divisible -> named in the error, which
+    # also points at the mapper API producing valid shapes
+    for dim, shape in (("M", dict(ok, m=100)), ("K", dict(ok, k=200)),
+                       ("N", dict(ok, n=70))):
+        xq, wq = codes(**shape)
+        with pytest.raises(ValueError, match=rf"{dim}.*divisible") as ei:
+            crossbar_matmul_quantized(xq, wq, cfg, interpret=True)
+        assert "repro.mapper.tiling.padded_grid" in str(ei.value)
+    # mismatched contraction dims
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        crossbar_matmul_quantized(jnp.zeros((128, 256), jnp.uint32),
+                                  jnp.zeros((128, 128), jnp.float32),
+                                  cfg, interpret=True)
+    # the ops-layer wrapper maps the same shapes fine (mapper padding)
+    rng = np.random.default_rng(9)
+    x = jnp.abs(_rand(rng, (100, 200), np.float32))
+    w = _rand(rng, (200, 70), np.float32)
+    out = crossbar_matmul(x, w, cfg, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(crossbar_matmul_ref(x, w, cfg)),
+                               rtol=1e-5, atol=1e-4)
+
+
 def test_scale_invariance_property():
     """Quantization is scale-calibrated: y(ax, w) ~= a*y(x, w)."""
     rng = np.random.default_rng(6)
