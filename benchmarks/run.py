@@ -9,6 +9,10 @@ callable ``main() -> int`` is a benchmark. Module conventions:
     their default path in both modes.
   * ``INFORMATIONAL``   — nonzero return is reported but does not fail the
     run (e.g. roofline_table when no dry-run file exists).
+  * ``METRICS``         — a dict the bench's ``main()`` fills with its
+    headline numbers; ``--json-out DIR`` persists it (plus name, argv,
+    return code, wall-clock, git sha) as ``DIR/BENCH_<name>.json`` — the
+    perf-trajectory artifact the CI smoke gate uploads on every PR.
 
 ``python -m benchmarks.run`` runs everything and exits non-zero on any
 paper-validation mismatch; ``--smoke`` runs every bench's smoke path (the
@@ -19,9 +23,12 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import os
 import pkgutil
+import subprocess
 import sys
+import time
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 for _p in (_ROOT, os.path.join(_ROOT, "src")):
@@ -56,17 +63,42 @@ def discover(names: list | None = None) -> dict:
     return registry
 
 
-def run_one(name: str, mod, smoke: bool) -> int:
-    """Run one benchmark under a controlled argv; returns its failure count."""
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=_ROOT, timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def run_one(name: str, mod, smoke: bool, json_out: str | None = None) -> int:
+    """Run one benchmark under a controlled argv; returns its failure count.
+
+    ``json_out``: directory to persist a ``BENCH_<name>.json`` artifact —
+    bench name, effective argv, return code, wall-clock seconds, git sha,
+    and whatever the module left in its ``METRICS`` dict."""
     argv = [f"benchmarks/{name}.py"]
     if smoke:
         argv += list(getattr(mod, "SMOKE_ARGV", []))
     saved = sys.argv
+    t0 = time.perf_counter()
     try:
         sys.argv = argv
         rc = int(mod.main() or 0)
     finally:
         sys.argv = saved
+    seconds = time.perf_counter() - t0
+    if json_out:
+        os.makedirs(json_out, exist_ok=True)
+        record = dict(bench=name, argv=argv[1:], smoke=smoke,
+                      returncode=rc, seconds=round(seconds, 3),
+                      git_sha=_git_sha(),
+                      metrics=getattr(mod, "METRICS", {}))
+        path = os.path.join(json_out, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2, default=str)
+        print(f"(wrote {path})")
     if rc and getattr(mod, "INFORMATIONAL", False):
         print(f"({name} is informational — not counted as a failure)")
         return 0
@@ -81,6 +113,9 @@ def main(argv: list | None = None) -> None:
                     help="run every bench's smoke path (the CI gate)")
     ap.add_argument("--list", action="store_true",
                     help="print the registry and exit")
+    ap.add_argument("--json-out", metavar="DIR",
+                    help="persist a BENCH_<name>.json artifact per bench "
+                         "(name, argv, metrics, git sha) into DIR")
     args = ap.parse_args(argv)
 
     registry = discover(args.modules or None)
@@ -97,7 +132,7 @@ def main(argv: list | None = None) -> None:
     failures = 0
     for name, mod in registry.items():
         print(f"\n===== {name}{' (smoke)' if args.smoke else ''} =====")
-        failures += run_one(name, mod, args.smoke)
+        failures += run_one(name, mod, args.smoke, json_out=args.json_out)
     if failures:
         sys.exit(f"{failures} benchmark validations failed")
     print(f"\nall {len(registry)} benchmark validations passed")

@@ -15,6 +15,14 @@ oracle and prints the measured bytes-on-the-wire both modes imply.
 Run with multiple fake devices to see real sharding:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/gnn_serve.py --clusters 8
+
+Streaming mode (``--stream N``) instead drives a taxi-style dynamic graph:
+``core.taxi.synthetic_stream`` ticks flow into
+``repro.streaming.StreamingGNNServer.ingest()``, embeddings refresh
+incrementally over the k-hop dirty frontier, and queries serve between
+commits (DESIGN.md §9):
+
+  PYTHONPATH=src python examples/gnn_serve.py --stream 12
 """
 import argparse
 
@@ -23,11 +31,57 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import costmodel, gnn
-from repro.core.graph import dataset_like
+from repro.core.graph import dataset_like, random_graph
 from repro.core.partition import build_local_subgraphs, gather_features, \
-    partition
+    partition, plan_execution
 from repro.distributed.halo import build_halo_plan, make_decentralized_forward
 from repro.launch.mesh import make_mesh
+
+
+def stream_demo(n_ticks: int, sample: int) -> None:
+    """End-to-end streaming quickstart: synthetic_stream ticks -> ingest ->
+    incremental refresh -> batched query."""
+    from repro.core import taxi
+    from repro.streaming import StreamingGNNServer
+
+    cfg_t = taxi.TaxiConfig(m=6, n=6)
+    n_nodes = 300
+    g = random_graph(n_nodes, n_nodes * 6, cfg_t.region, seed=0)
+    g = g.gcn_normalize()
+    plan = plan_execution(g, "decentralized", backend="jnp", sample=sample,
+                          n_clusters=4)
+    cfg = gnn.GNNConfig(in_dim=cfg_t.region, hidden_dims=(32,), out_dim=16,
+                        sample=sample)
+    srv = StreamingGNNServer(plan, cfg, policy="bounded-staleness",
+                             max_staleness=4, max_dirty_frac=0.3)
+    print(f"streaming: {n_nodes} taxis, {cfg_t.region}-dim demand maps, "
+          f"cold refresh {srv.refresh() * 1e3:.1f} ms")
+
+    # the §4.2 demand/supply stream: each tick only part of the map moves
+    stream = np.asarray(taxi.synthetic_stream(jax.random.key(0), n_nodes,
+                                              n_ticks, cfg_t))
+    rng = np.random.default_rng(0)
+    feats = np.asarray(g.features)
+    for t in range(n_ticks):
+        moved = rng.random(n_nodes) < 0.1          # 10% of taxis move
+        x_t = feats.copy()
+        x_t[moved] = stream[t][moved]
+        feats = x_t
+        upd = srv.ingest(x_t)
+        emb = srv.query(rng.integers(0, n_nodes, 16))
+        state = ("commit: recomputed "
+                 f"{upd.recompute_fraction * 100:5.1f}% of rows, "
+                 f"{upd.seconds * 1e3:6.1f} ms"
+                 + (f", shipped {upd.traffic.total_bytes() / 1e3:.1f} kB"
+                    if upd.traffic is not None else "")
+                 if upd is not None else
+                 f"buffered ({srv.pending_ticks} ticks pending)")
+        print(f"  tick {t:2d}: {state}; served {len(emb)} lookups")
+    srv.flush()
+    fracs = [u.recompute_fraction for u in srv.updates if not u.full]
+    print(f"{srv.commits} commits ({srv.full_refreshes} full); mean "
+          f"incremental recompute fraction "
+          f"{float(np.mean(fracs)) if fracs else 1.0:.3f}")
 
 
 def main():
@@ -35,7 +89,13 @@ def main():
     ap.add_argument("--clusters", type=int, default=0,
                     help="default: one per device")
     ap.add_argument("--sample", type=int, default=8)
+    ap.add_argument("--stream", type=int, default=0, metavar="TICKS",
+                    help="run the streaming demo for TICKS synthetic_stream "
+                         "ticks instead of the static serving demo")
     args = ap.parse_args()
+
+    if args.stream:
+        return stream_demo(args.stream, args.sample)
 
     n_dev = len(jax.devices())
     k = args.clusters or n_dev

@@ -40,9 +40,9 @@ def init_params(key: jax.Array, cfg: TaxiConfig) -> dict:
     glorot = lambda kk, a, b: jax.random.normal(kk, (a, b), jnp.float32) * jnp.sqrt(2.0 / (a + b))
     return {
         # one relational transform per edge type + a self transform
-        "w_rel": jnp.stack([glorot(k[0], f_in, cfg.hidden)] * 0 +
-                           [glorot(jax.random.fold_in(k[0], r), f_in, cfg.hidden)
-                            for r in range(cfg.n_edge_types)]),
+        "w_rel": jnp.stack(
+            [glorot(jax.random.fold_in(k[0], r), f_in, cfg.hidden)
+             for r in range(cfg.n_edge_types)]),
         "w_self": glorot(k[1], f_in, cfg.hidden),
         "b_fuse": jnp.zeros((cfg.hidden,), jnp.float32),
         # LSTM cell

@@ -10,6 +10,15 @@ serving-path entry point the benchmark sweep and the examples drive.
 
   PYTHONPATH=src python -m repro.launch.gnn --setting semi --backend fused \
       --clusters 4 --sample 8 --requests 64
+
+Streaming mode (``--stream N``) serves the same plan through
+``repro.streaming.StreamingGNNServer``: N synthetic feature ticks are
+ingested under the chosen refresh ``--policy``, embeddings refresh
+incrementally over the k-hop dirty frontier, and the driver prints
+recomputed-node fraction and measured incremental traffic (DESIGN.md §9):
+
+  PYTHONPATH=src python -m repro.launch.gnn --setting decentralized \
+      --stream 16 --churn 0.05 --policy bounded-staleness
 """
 from __future__ import annotations
 
@@ -42,7 +51,8 @@ class GNNServer:
         self.params = params if params is not None else gnn.init_params(
             jax.random.key(seed), self.cfg)
         self._mesh = mesh
-        self._forward = plan.make_forward(cfg, mesh=mesh, mode=mode)
+        self._forward = None    # built lazily: subclasses that refresh
+        #                         through another engine never pay for it
         self.mode = mode
         self.embeddings: np.ndarray | None = None
         self.refreshes = 0
@@ -60,8 +70,7 @@ class GNNServer:
         cfg = cfg if cfg is not None else self.cfg
         self.plan = plan
         self.cfg = plan.gnn_config(cfg)
-        self._forward = plan.make_forward(cfg, mesh=self._mesh,
-                                          mode=self.mode)
+        self._forward = None
         self.version += 1
 
     @property
@@ -71,6 +80,9 @@ class GNNServer:
     def refresh(self) -> float:
         """Recompute all node embeddings; returns wall-clock seconds."""
         t0 = time.perf_counter()
+        if self._forward is None:
+            self._forward = self.plan.make_forward(self.cfg, mesh=self._mesh,
+                                                   mode=self.mode)
         out = jax.block_until_ready(self._forward(self.params))
         self.embeddings = self.plan.scatter(np.asarray(out))
         self.refreshes += 1
@@ -78,10 +90,61 @@ class GNNServer:
         return time.perf_counter() - t0
 
     def query(self, node_ids) -> np.ndarray:
-        """Serve one batch of embedding lookups (refresh if stale)."""
+        """Serve one batch of embedding lookups (refresh if stale).
+
+        Batched: ids are validated against the *served* embedding table
+        (out-of-range ids raise IndexError naming the offending bound —
+        after ``update_plan`` to a smaller graph, stale ids fail loudly
+        instead of wrapping); any batch shape gathers in one fancy index.
+        """
         if self.stale:
             self.refresh()
-        return self.embeddings[np.asarray(node_ids)]
+        ids = np.asarray(node_ids, np.int64)
+        n = len(self.embeddings)
+        if ids.size and (ids.min() < 0 or ids.max() >= n):
+            raise IndexError(
+                f"node ids must be in [0, {n}); batch spans "
+                f"[{ids.min()}, {ids.max()}]")
+        return self.embeddings[ids]
+
+
+def stream_main(args, g, plan, cfg) -> None:
+    """--stream driver: ingest a synthetic tick stream, serve batched
+    lookups between commits, report incremental refresh statistics."""
+    from repro.streaming import StreamingGNNServer
+    srv = StreamingGNNServer(plan, cfg, mode=args.mode, policy=args.policy)
+    t_cold = srv.refresh()
+    print(f"plan: {args.setting}/{args.backend}, {g.n_nodes} nodes, "
+          f"{plan.n_clusters} clusters; policy {args.policy}; "
+          f"cold full refresh {t_cold * 1e3:.1f} ms")
+    rng = np.random.default_rng(0)
+    served = 0
+    inc_bytes = 0
+    loop_commits = 0
+    t0 = time.perf_counter()
+    for tick in range(args.stream):
+        n_mut = max(int(g.n_nodes * args.churn), 1)
+        nodes = rng.choice(g.n_nodes, n_mut, replace=False)
+        rows = rng.normal(size=(n_mut, g.feature_len)).astype(np.float32)
+        upd = srv.ingest(nodes=nodes, rows=rows)
+        if upd is not None:
+            loop_commits += 1
+            if upd.traffic is not None:
+                inc_bytes += upd.traffic.total_bytes()
+        served += len(srv.query(rng.integers(0, g.n_nodes, args.batch)))
+    dt = time.perf_counter() - t0
+    # the cold-start commit is a full refresh by construction — keep it out
+    # of the incremental statistics it would otherwise bias
+    fracs = [u.recompute_fraction for u in srv.updates if not u.full]
+    print(f"{args.stream} ticks, {srv.commits} commits "
+          f"({srv.full_refreshes} full), mean incremental recompute "
+          f"fraction {float(np.mean(fracs)) if fracs else 1.0:.3f}")
+    if plan.setting != "centralized" and loop_commits:
+        print(f"measured incremental traffic {inc_bytes / 1e6:.3f} MB "
+              f"(full-refresh equivalent "
+              f"{plan.measured_traffic(srv.cfg, mode=args.mode).total_bytes() * loop_commits / 1e6:.3f} MB)")
+    print(f"served {served} lookups alongside the stream in "
+          f"{dt * 1e3:.1f} ms")
 
 
 def main() -> None:
@@ -107,6 +170,14 @@ def main() -> None:
     ap.add_argument("--mapping", action="store_true",
                     help="print the compiled crossbar mapping report "
                          "(DESIGN.md §8)")
+    ap.add_argument("--stream", type=int, default=0, metavar="TICKS",
+                    help="serve a TICKS-long synthetic feature stream "
+                         "through StreamingGNNServer (incremental refresh)")
+    ap.add_argument("--churn", type=float, default=0.05,
+                    help="stream mode: fraction of nodes mutated per tick")
+    ap.add_argument("--policy", default="eager",
+                    choices=("eager", "interval", "bounded-staleness"),
+                    help="stream mode: refresh policy")
     args = ap.parse_args()
 
     g = dataset_like(args.dataset, scale=args.scale, seed=0).gcn_normalize()
@@ -122,6 +193,8 @@ def main() -> None:
             else None)
     cfg = gnn.GNNConfig(in_dim=g.feature_len, hidden_dims=(args.hidden,),
                         out_dim=16, sample=args.sample)
+    if args.stream:
+        return stream_main(args, g, plan, cfg)
     srv = GNNServer(plan, cfg, mesh=mesh, mode=args.mode)
 
     dt = srv.refresh()

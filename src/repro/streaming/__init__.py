@@ -1,0 +1,33 @@
+"""Streaming inference runtime: dynamic graphs, incremental k-hop refresh,
+and batched serving (DESIGN.md §9).
+
+The §4.2 taxi workload streams — positions and demand maps move every tick
+— and only a delta of the graph changes per step. This package makes that
+delta first-class:
+
+  * ``delta``       — ``GraphDelta`` mutation buffer + ``apply_deltas``
+    amortized CSR rebuild (gcn_normalize contract preserved).
+  * ``frontier``    — k-hop dirty-frontier masks: which rows each of the L
+    layers must recompute.
+  * ``incremental`` — ``IncrementalEngine``: cached per-layer activations,
+    dirty-rows-only recompute through the same layer step every
+    backend × setting uses, incremental traffic billing.
+  * ``server``      — ``StreamingGNNServer``: ``ingest()`` tick streams,
+    eager / interval / bounded-staleness refresh policies, batched
+    ``query()``.
+
+``benchmarks/streaming_replay.py`` replays a taxi tick stream over all
+settings and reports full-vs-incremental wall-clock, recomputed-node
+fraction, and measured traffic (EXPERIMENTS.md §Streaming-replay).
+"""
+from .delta import DeltaResult, GraphDelta, apply_deltas
+from .frontier import FrontierMasks, expand_frontier
+from .incremental import IncrementalEngine, StreamingUpdate
+from .server import POLICIES, StreamingGNNServer
+
+__all__ = [
+    "DeltaResult", "GraphDelta", "apply_deltas",
+    "FrontierMasks", "expand_frontier",
+    "IncrementalEngine", "StreamingUpdate",
+    "POLICIES", "StreamingGNNServer",
+]

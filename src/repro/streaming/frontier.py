@@ -1,0 +1,85 @@
+"""k-hop dirty-frontier tracking: which rows must each GNN layer recompute.
+
+An L-layer GNN reads a node's L-hop neighborhood, so a mutation at node v
+invalidates layer-l activations of every node within l hops of v — the
+"dirty frontier". The expansion runs over the *padded neighbor sample* the
+kernels actually read (``Graph.neighbor_sample`` truncation included), so
+the masks are exact w.r.t. the runtime, not the untruncated graph: an edge
+past the sample cut never dirties anything.
+
+Mask semantics (``FrontierMasks.masks[l]``, shape [L+1, N]):
+
+  * ``masks[0]``  — rows of the *input* table h^0 that changed
+    (feature-dirty nodes).
+  * ``masks[l]``  — rows of h^l (the output of layer l) that must be
+    recomputed: structure-dirty rows (their sample/weights changed), plus
+    any row whose sample contains a ``masks[l-1]`` node. Because the sample
+    always contains the self loop, masks are monotone:
+    ``masks[l-1] <= masks[l]`` wherever the row's own input was dirty.
+
+``streaming.incremental`` consumes these masks directly; the recomputed-node
+fraction they imply is the headline number ``benchmarks/streaming_replay``
+reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierMasks:
+    """Per-layer recompute masks over global node ids."""
+    masks: np.ndarray              # [L+1, N] bool; [0] = input dirt
+
+    @property
+    def n_layers(self) -> int:
+        return self.masks.shape[0] - 1
+
+    @property
+    def n_nodes(self) -> int:
+        return self.masks.shape[1]
+
+    def layer(self, l: int) -> np.ndarray:
+        """[N] bool — rows of h^l to recompute (l in [1, L])."""
+        return self.masks[l]
+
+    def recompute_fraction(self) -> float:
+        """Recomputed rows across layers 1..L over L*N — the fraction of
+        per-layer kernel work an incremental refresh performs."""
+        l, n = self.n_layers, self.n_nodes
+        if l == 0 or n == 0:
+            return 0.0
+        return float(self.masks[1:].sum()) / float(l * n)
+
+    def counts(self) -> np.ndarray:
+        """[L+1] dirty-row count per level."""
+        return self.masks.sum(axis=1)
+
+
+def expand_frontier(neighbors: np.ndarray, weights: np.ndarray,
+                    feature_dirty: np.ndarray, structure_dirty: np.ndarray,
+                    n_layers: int) -> FrontierMasks:
+    """BFS the dirt L hops through the sampled adjacency.
+
+    ``neighbors``/``weights``: [N, S] — the *global* padded sample of the
+    mutated graph (self loops included), i.e. exactly what the centralized
+    runtime reads and the same edge set the per-cluster subgraphs are built
+    from. Padding slots carry weight 0 and contribute nothing, so dirt does
+    not propagate through them (without this, a dirty node 0 would dirty
+    every padded row). ``feature_dirty`` / ``structure_dirty``: [N] bool
+    from ``apply_deltas``.
+    """
+    neighbors = np.asarray(neighbors)
+    n = neighbors.shape[0]
+    live = np.asarray(weights) != 0        # [N, S] real (non-padding) slots
+    feature_dirty = np.asarray(feature_dirty, bool).reshape(n)
+    structure_dirty = np.asarray(structure_dirty, bool).reshape(n)
+    masks = np.zeros((n_layers + 1, n), bool)
+    masks[0] = feature_dirty
+    for l in range(1, n_layers + 1):
+        # a row is dirty iff its own sample changed or any sampled input was
+        prev = masks[l - 1]
+        masks[l] = structure_dirty | (prev[neighbors] & live).any(axis=1)
+    return FrontierMasks(masks)

@@ -1,0 +1,378 @@
+"""Incremental GNN forward over an ExecutionPlan: recompute only the dirty
+frontier, reuse cached per-layer activations for everything else.
+
+``IncrementalEngine`` wraps an ``ExecutionPlan`` (any setting ×
+any backend) and maintains:
+
+  * the evolving ``Graph`` (mutated via ``streaming.delta``),
+  * cached per-layer activations in the plan's owned-row layout
+    ``[K, n_max, F_l]`` for levels 0..L (level 0 is the input table — for
+    semi this is the tier-0-assembled region table),
+  * the plan's structural tables, rebuilt in place on edge deltas with the
+    *same* cluster assignment (nodes never migrate mid-stream, so the
+    caches stay row-aligned; only the halo/send tables change).
+
+Per tick, ``apply_delta`` commits the mutation buffer, expands the k-hop
+dirty frontier (``streaming.frontier``), and re-runs each layer only on its
+dirty rows — through the exact same per-device layer step
+(``distributed.halo._layer_step``) every backend-setting combination uses,
+so incremental output matches a full recompute to fp32 tolerance (the
+property ``tests/test_streaming.py`` checks on all 3 × 3 combinations).
+Halo inputs for dirty rows are gathered from the cached level-(l-1) owned
+tables; the wire traffic a real deployment would ship for that gather —
+only rows whose value changed, plus send slots structural churn newly
+created — is billed by ``distributed.traffic.measure_incremental``.
+
+Degradation to full refresh (DESIGN.md §9): bit-accurate crossbar numerics
+(``cfg.numerics.ideal=False``) quantize against a *global* DAC scale
+``max|Z|``, so a subset recompute would see a different scale than a full
+pass and drift; the engine detects this and falls back to a full refresh
+(``StreamingUpdate.full=True``) rather than serve non-reproducible
+embeddings.
+
+Dirty row counts vary every tick; to keep JIT recompilation bounded the
+engine buckets the recompute batch to the next power of two (padded rows
+are sliced off), so at most O(log n_max) variants per (layer, cluster
+shape) ever compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import (ExecutionPlan, _from_assignment,
+                                  build_local_subgraphs)
+from repro.distributed.halo import HaloPlan, _layer_step, build_halo_plan
+from repro.distributed.traffic import (StreamingTrafficReport,
+                                       measure_incremental)
+from repro.streaming.delta import DeltaResult, GraphDelta, apply_deltas
+from repro.streaming.frontier import FrontierMasks, expand_frontier
+
+_MIN_BUCKET = 8
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Next power of two >= n (>= _MIN_BUCKET), capped at the table size."""
+    b = _MIN_BUCKET
+    while b < n:
+        b <<= 1
+    return min(b, cap)
+
+
+_rows_step = jax.jit(
+    lambda table, nbr, wts, w, b, cfg, act:
+    _layer_step(table, nbr, wts, {"w": w, "b": b}, cfg, act),
+    static_argnames=("cfg", "act"))
+
+
+@dataclasses.dataclass
+class StreamingUpdate:
+    """Outcome of one committed tick."""
+    frontier: FrontierMasks
+    traffic: StreamingTrafficReport | None   # None for centralized
+    seconds: float                           # wall-clock of the commit
+    full: bool                               # True => degraded to full refresh
+
+    @property
+    def recompute_fraction(self) -> float:
+        return 1.0 if self.full else self.frontier.recompute_fraction()
+
+
+class IncrementalEngine:
+    """Streaming counterpart of ``ExecutionPlan.make_forward``."""
+
+    def __init__(self, plan: ExecutionPlan, cfg, params,
+                 mode: str = "alltoall"):
+        self.plan = plan
+        self.cfg = plan.gnn_config(cfg)
+        self.params = params
+        self.mode = mode
+        self.graph = plan.graph
+        self.n_layers = len(params)
+        self.sample = plan.sample
+        # global padded sample of the live graph: frontier expansion +
+        # the centralized runtime read the same truncated edge set
+        self._gnbr, self._gwts = self.graph.neighbor_sample(self.sample)
+        self._halo_plan: HaloPlan | None = (
+            build_halo_plan(plan.part) if plan.part is not None else None)
+        self._new_send: np.ndarray | None = None  # send slots churn created
+        self._acts: list | None = None            # [K, n_max, F_l] per level
+        self.last_update: StreamingUpdate | None = None
+        self.ticks = 0
+
+    # ---- layout helpers -------------------------------------------------
+
+    @property
+    def _k(self) -> int:
+        return self.plan.n_clusters
+
+    def _to_local(self, gmask: np.ndarray) -> np.ndarray:
+        """[N] global bool -> [K, n_max] owned-row bool."""
+        if self.plan.part is None:
+            return gmask[None].copy()
+        part = self.plan.part
+        return gmask[part.local_nodes] & part.local_mask
+
+    def _owned_features(self) -> np.ndarray:
+        """[K, n_max, F0] level-0 table (semi: the tier-0 assembled region
+        tables — same rows the spoke gather produces)."""
+        from repro.core.partition import gather_features
+        if self.plan.part is None:
+            return self.graph.features[None].astype(np.float32)
+        return gather_features(self.graph, self.plan.part)
+
+    def _halo_table(self, owned: jax.Array) -> jax.Array | None:
+        """[K, h_max, F] halo rows gathered from the stacked owned tables
+        (the emulated exchange's value semantics; what a real deployment
+        ships to keep this table fresh is billed separately)."""
+        hp = self._halo_plan
+        if hp is None:
+            return None
+        halo = owned[hp.src_cluster, hp.src_slot]
+        return halo * jnp.asarray(hp.halo_mask.astype(np.float32))[..., None]
+
+    # ---- full refresh ---------------------------------------------------
+
+    def full_refresh(self) -> float:
+        """(Re)compute every cached level from scratch; returns seconds.
+
+        Caches are kept device-resident (jnp) so incremental ticks patch
+        dirty rows in place instead of re-uploading whole tables."""
+        t0 = time.perf_counter()
+        x = jnp.asarray(self._owned_features())
+        acts = [x]
+        nbr, wts = self.plan.neighbors, self.plan.weights
+        for l in range(self.n_layers):
+            layer = self.params[l]
+            act = l < self.n_layers - 1 or self.cfg.final_activation
+            halo = self._halo_table(acts[l])
+            outs = []
+            for c in range(self._k):
+                table = (acts[l][c] if halo is None
+                         else jnp.concatenate([acts[l][c], halo[c]], axis=0))
+                outs.append(_rows_step(table, jnp.asarray(nbr[c]),
+                                       jnp.asarray(wts[c]), layer["w"],
+                                       layer["b"], self.cfg, act))
+            acts.append(jnp.stack(outs))
+        jax.block_until_ready(acts[-1])
+        self._acts = acts
+        return time.perf_counter() - t0
+
+    def _sync_plan_feats(self, dirty0_local: np.ndarray | None = None
+                         ) -> None:
+        """The engine mutates the shared ExecutionPlan in place; keep its
+        ``feats`` tables consistent with the live graph so a later
+        ``plan.make_forward`` (or a fresh server on the same plan) sees
+        current features. ``dirty0_local`` patches only mutated rows; None
+        rebuilds wholesale."""
+        g, plan = self.graph, self.plan
+        if plan.part is None:
+            plan.feats = g.features[None]                # view, O(1)
+            return
+        if plan.setting == "semi":
+            hier = plan.hier
+            if dirty0_local is None:
+                from repro.core.partition import gather_spoke_features
+                plan.feats = gather_spoke_features(g, hier)
+                return
+            for r in range(self._k):
+                rows = np.nonzero(dirty0_local[r])[0]
+                if len(rows):
+                    plan.feats[r, hier.gather_spoke[r, rows],
+                               hier.gather_slot[r, rows]] = \
+                        g.features[plan.part.local_nodes[r][rows]]
+            return
+        if dirty0_local is None:
+            from repro.core.partition import gather_features
+            plan.feats = gather_features(g, plan.part)
+            return
+        for c in range(self._k):
+            rows = np.nonzero(dirty0_local[c])[0]
+            if len(rows):
+                plan.feats[c][rows] = \
+                    g.features[plan.part.local_nodes[c][rows]]
+
+    # ---- structural rebuild --------------------------------------------
+
+    def _rebuild_structure(self) -> None:
+        """Re-derive the plan's tables from the mutated graph, keeping the
+        node->cluster assignment (owned rows stay put; halo/send tables and
+        the global sample change)."""
+        g = self.graph
+        plan = self.plan
+        self._gnbr, self._gwts = g.neighbor_sample(self.sample)
+        plan.graph = g
+        if plan.part is None:
+            plan.neighbors = self._gnbr[None]
+            plan.weights = self._gwts[None]
+            return
+        part = _from_assignment(g, plan.part.assignment, self._k,
+                                sample=self.sample)
+        sub = build_local_subgraphs(g, part, self.sample)
+        old = self._halo_plan
+        new = build_halo_plan(part)
+        self._new_send = _new_send_slots(old, new)
+        self._halo_plan = new
+        plan.part = part
+        plan.sub = sub
+        plan.neighbors = sub.neighbors
+        plan.weights = sub.weights
+        if plan.hier is not None:
+            plan.hier = dataclasses.replace(plan.hier, region=part)
+
+    # ---- incremental tick ----------------------------------------------
+
+    def apply_delta(self, delta: GraphDelta) -> StreamingUpdate:
+        """Commit a mutation buffer and refresh only the dirty frontier.
+
+        The buffer is cleared on success. Requires a prior ``full_refresh``
+        (the caches must exist before they can be patched).
+        """
+        if self._acts is None:
+            raise RuntimeError("call full_refresh() before apply_delta()")
+        t0 = time.perf_counter()
+        res = apply_deltas(self.graph, delta)
+        self.graph = res.graph
+        if res.structure_dirty.any():
+            self._rebuild_structure()
+        update = self._refresh_dirty(res, t0)
+        delta.clear()
+        self.ticks += 1
+        self.last_update = update
+        return update
+
+    def _refresh_dirty(self, res: DeltaResult, t0: float) -> StreamingUpdate:
+        l_total = self.n_layers
+        fr = expand_frontier(self._gnbr, self._gwts, res.feature_dirty,
+                             res.structure_dirty, l_total)
+        if not self.cfg.numerics.ideal:
+            # global DAC scale couples every row — subset recompute would
+            # quantize against a stale max|Z| (DESIGN.md §9): degrade
+            self._sync_plan_feats()
+            secs = self.full_refresh()
+            self._new_send = None
+            return StreamingUpdate(fr, self._full_traffic(), secs, full=True)
+        dirty_locals = np.stack([self._to_local(fr.masks[l])
+                                 for l in range(l_total + 1)])
+        # level 0: patch mutated feature rows into the cached input table
+        # (and the shared plan's feats tables, which track the live graph)
+        self._sync_plan_feats(dirty_locals[0])
+        if dirty_locals[0].any():
+            part = self.plan.part
+            for c in range(self._k):
+                rows = np.nonzero(dirty_locals[0][c])[0]
+                if not len(rows):
+                    continue
+                # bucket-pad (repeat a dirty row) so the scatter's shape —
+                # and hence its compiled executable — is reused across ticks
+                padded = np.full(_bucket(len(rows), dirty_locals.shape[2]),
+                                 rows[0], np.int64)
+                padded[:len(rows)] = rows
+                ids = padded if part is None else part.local_nodes[c][padded]
+                self._acts[0] = self._acts[0].at[c, padded].set(
+                    jnp.asarray(self.graph.features[ids]))
+        nbr, wts = self.plan.neighbors, self.plan.weights
+        n_max = dirty_locals.shape[2]
+        for l in range(l_total):
+            layer = self.params[l]
+            act = l < l_total - 1 or self.cfg.final_activation
+            d = dirty_locals[l + 1]
+            if not d.any():
+                continue
+            hp = self._halo_plan
+            for c in range(self._k):
+                rows = np.nonzero(d[c])[0]
+                if not len(rows):
+                    continue
+                # bucket-pad with a repeated dirty row: the pad rows compute
+                # the same value, so the duplicate scatter below is benign
+                b = _bucket(len(rows), d.shape[1])
+                padded = np.full(b, rows[0], np.int64)
+                padded[:len(rows)] = rows
+                sub_nbr, sub_wts = nbr[c][padded], wts[c][padded]
+                table = self._acts[l][c]
+                if hp is not None and (sub_nbr >= n_max).any():
+                    # only pay the halo gather when a dirty row reads one
+                    halo = (self._acts[l][hp.src_cluster[c], hp.src_slot[c]]
+                            * jnp.asarray(hp.halo_mask[c].astype(
+                                np.float32))[:, None])
+                    table = jnp.concatenate([table, halo], axis=0)
+                out = _rows_step(table, jnp.asarray(sub_nbr),
+                                 jnp.asarray(sub_wts),
+                                 layer["w"], layer["b"], self.cfg, act)
+                self._acts[l + 1] = self._acts[l + 1].at[c, padded].set(out)
+        jax.block_until_ready(self._acts[-1])
+        traffic = None
+        if self._halo_plan is not None:
+            traffic = measure_incremental(
+                self.plan, self._halo_plan, dirty_locals, self.cfg,
+                mode=self.mode, new_send=self._new_send)
+        self._new_send = None
+        return StreamingUpdate(fr, traffic, time.perf_counter() - t0,
+                               full=False)
+
+    def commit_full(self, delta: GraphDelta | None = None) -> StreamingUpdate:
+        """Apply a buffer (optional) and rebuild every cache level — the
+        full-refresh path param swaps, cold starts, and the bit-accurate
+        degradation route through. Unlike ``apply_delta`` it needs no
+        existing caches."""
+        t0 = time.perf_counter()
+        n = self.graph.n_nodes
+        fd = np.zeros(n, bool)
+        sd = np.zeros(n, bool)
+        if delta is not None and len(delta):
+            res = apply_deltas(self.graph, delta)
+            self.graph = res.graph
+            if res.structure_dirty.any():
+                self._rebuild_structure()
+            fd, sd = res.feature_dirty, res.structure_dirty
+            delta.clear()
+            self._sync_plan_feats()
+        self.full_refresh()
+        fr = expand_frontier(self._gnbr, self._gwts, fd, sd, self.n_layers)
+        self._new_send = None
+        self.ticks += 1
+        self.last_update = StreamingUpdate(
+            fr, self._full_traffic(), time.perf_counter() - t0, full=True)
+        return self.last_update
+
+    def _full_traffic(self) -> StreamingTrafficReport | None:
+        """Per-layer billing of a full refresh (the degraded path ships
+        everything every layer)."""
+        if self._halo_plan is None:
+            return None
+        part = self.plan.part
+        all_dirty = np.stack([part.local_mask] * (self.n_layers + 1))
+        return measure_incremental(self.plan, self._halo_plan, all_dirty,
+                                   self.cfg, mode=self.mode, new_send=None)
+
+    # ---- outputs --------------------------------------------------------
+
+    def embeddings(self) -> np.ndarray:
+        """[N, out_dim] current embeddings in global node order."""
+        if self._acts is None:
+            raise RuntimeError("call full_refresh() first")
+        return self.plan.scatter(self._acts[-1])
+
+
+def _new_send_slots(old: HaloPlan, new: HaloPlan) -> np.ndarray | None:
+    """Bool mask over ``new``'s send table marking slots absent from
+    ``old`` — rows an alltoall must ship after structural churn even when
+    their source value is clean (the peer has never cached them)."""
+    if old is None:
+        return None
+    base = np.int64(max(int(old.send_slot.max(initial=0)),
+                        int(new.send_slot.max(initial=0))) + 1)
+
+    def keys(plan: HaloPlan) -> np.ndarray:
+        k = plan.send_slot.shape[0]
+        c = np.arange(k, dtype=np.int64)[:, None, None]
+        j = np.arange(k, dtype=np.int64)[None, :, None]
+        return (c * k + j) * base + plan.send_slot
+
+    have = keys(old)[old.send_mask]
+    return new.send_mask & ~np.isin(keys(new), have)

@@ -54,3 +54,40 @@ def test_explicit_refresh_clears_staleness():
     assert not srv.stale
     srv.query(np.arange(2))
     assert srv.refreshes == 1          # query reused the explicit refresh
+
+
+def test_batched_query_handles_duplicates_and_shape():
+    srv, _, g = _server()
+    ids = np.array([3, 7, 3, 0, 7, 7])
+    out = srv.query(ids)
+    assert out.shape == (6, srv.cfg.out_dim)
+    np.testing.assert_array_equal(out[0], out[2])      # duplicate rows agree
+    np.testing.assert_array_equal(out[1], out[4])
+    np.testing.assert_array_equal(out, srv.embeddings[ids])
+    # nd batches keep their shape
+    out2 = srv.query(ids.reshape(2, 3))
+    assert out2.shape == (2, 3, srv.cfg.out_dim)
+    np.testing.assert_array_equal(out2.reshape(6, -1), out)
+
+
+def test_query_rejects_out_of_range_ids():
+    srv, _, g = _server()
+    with np.testing.assert_raises(IndexError):
+        srv.query([0, g.n_nodes])                      # one past the end
+    with np.testing.assert_raises(IndexError):
+        srv.query([-1])
+    assert srv.query(np.zeros(0, np.int64)).shape == (0, srv.cfg.out_dim)
+
+
+def test_update_plan_to_different_node_count_swaps_staleness_domain():
+    """After swapping to a smaller graph, the refreshed table serves the
+    new node set and ids valid only in the old graph fail loudly."""
+    srv, cfg, g = _server()
+    srv.query([g.n_nodes - 1])
+    g2 = random_graph(24, 120, 24, seed=11).gcn_normalize()
+    srv.update_plan(plan_execution(g2, "centralized", sample=4), cfg)
+    assert srv.stale
+    out = srv.query(np.arange(24))                     # refresh on new graph
+    assert out.shape == (24, cfg.out_dim) and srv.refreshes == 2
+    with np.testing.assert_raises(IndexError):
+        srv.query([g.n_nodes - 1])                     # old-domain id: 39

@@ -1,0 +1,326 @@
+"""Streaming subsystem: delta rebuild contract, k-hop frontier exactness,
+incremental-vs-full equivalence on every backend x setting, incremental
+traffic invariants, and the StreamingGNNServer refresh policies."""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import gnn
+from repro.core.graph import Graph, random_graph
+from repro.core.partition import plan_execution
+from repro.kernels.crossbar_mvm import CrossbarNumerics
+from repro.streaming import (GraphDelta, IncrementalEngine,
+                             StreamingGNNServer, apply_deltas,
+                             expand_frontier)
+
+SETTINGS = ("centralized", "decentralized", "semi")
+
+
+def _graph(n=40, e=200, f=12, seed=1):
+    return random_graph(n, e, f, seed=seed).gcn_normalize()
+
+
+def _raw_edges(g: Graph):
+    dst = np.repeat(np.arange(g.n_nodes), np.diff(g.indptr))
+    return dst, g.indices.astype(np.int64)
+
+
+# ---- delta: amortized rebuild + renormalization contract ----------------
+
+def test_feature_only_delta_keeps_structure():
+    g = _graph()
+    d = GraphDelta(g.n_nodes)
+    rows = np.ones((3, g.feature_len), np.float32)
+    d.update_features([5, 1, 9], rows)
+    res = apply_deltas(g, d)
+    assert res.graph is not g and res.graph.features is not g.features
+    np.testing.assert_array_equal(res.graph.indptr, g.indptr)
+    np.testing.assert_array_equal(res.graph.indices, g.indices)
+    np.testing.assert_array_equal(res.graph.features[[1, 5, 9]], rows)
+    assert set(np.nonzero(res.feature_dirty)[0]) == {1, 5, 9}
+    assert not res.structure_dirty.any()
+
+
+def test_structural_delta_matches_scratch_renormalization():
+    """apply_deltas on a normalized graph must equal rebuilding the raw
+    graph with the same edits and calling gcn_normalize from scratch."""
+    g_raw = random_graph(30, 150, 4, seed=3, weighted=False)
+    g = g_raw.gcn_normalize()
+    d = GraphDelta(g.n_nodes)
+    d.add_edges([2, 17, 17], [9, 4, 4])
+    rm_dst, rm_src = int(np.repeat(np.arange(30), np.diff(g.indptr))[0]), \
+        int(g.indices[0])
+    d.remove_edges([rm_dst], [rm_src])
+    res = apply_deltas(g, d)
+
+    # scratch oracle: same edit applied to the raw edge list
+    dst, src = _raw_edges(g_raw)
+    keep = ~((dst == rm_dst) & (src == rm_src))
+    dst = np.concatenate([dst[keep], [2, 17, 17]])
+    src = np.concatenate([src[keep], [9, 4, 4]])
+    order = np.argsort(dst, kind="stable")
+    indptr = np.zeros(31, np.int64)
+    np.add.at(indptr, dst + 1, 1)
+    oracle = Graph(np.cumsum(indptr), src[order].astype(np.int32), None,
+                   g_raw.features).gcn_normalize()
+
+    np.testing.assert_array_equal(res.graph.indptr, oracle.indptr)
+    np.testing.assert_array_equal(res.graph.indices, oracle.indices)
+    np.testing.assert_allclose(res.graph.edge_weight, oracle.edge_weight,
+                               rtol=1e-6)
+    np.testing.assert_allclose(res.graph.self_loop, oracle.self_loop,
+                               rtol=1e-6)
+    # the edited rows are structure-dirty, as is everything a degree change
+    # touches (rows reading node 2 / 17 / rm_dst as a source)
+    for u in (2, 17, rm_dst):
+        assert res.structure_dirty[u]
+
+
+def test_remove_edges_drops_all_parallel_duplicates():
+    g = Graph(np.array([0, 0, 3]), np.array([0, 0, 1], np.int32),
+              np.ones(3, np.float32), np.zeros((2, 2), np.float32))
+    d = GraphDelta(2).remove_edges([1], [0])
+    res = apply_deltas(g, d)
+    assert res.graph.n_edges == 1 and res.graph.indices[0] == 1
+
+
+def test_remove_cancels_earlier_buffered_add_but_not_later():
+    """Buffered policies replay ops in order: add-then-remove nets out,
+    remove-then-add survives (regression: removes used to apply only to
+    pre-existing edges, so a removed-after-added edge leaked through)."""
+    g = _graph(20, 60, 4, seed=5)
+    has = (np.repeat(np.arange(20), np.diff(g.indptr)) * 20
+           + g.indices).tolist()
+    pair = next((d, s) for d in range(20) for s in range(20)
+                if d * 20 + s not in has)
+    d = GraphDelta(20).add_edges([pair[0]], [pair[1]])
+    d.remove_edges([pair[0]], [pair[1]])
+    assert apply_deltas(g, d).graph.n_edges == g.n_edges    # netted out
+    d2 = GraphDelta(20).remove_edges([pair[0]], [pair[1]])
+    d2.add_edges([pair[0]], [pair[1]])
+    assert apply_deltas(g, d2).graph.n_edges == g.n_edges + 1
+
+
+def test_engine_keeps_shared_plan_consistent():
+    """The engine mutates the ExecutionPlan in place; after streaming, the
+    plan's own make_forward must reproduce the engine's embeddings (feats
+    and structural tables both tracked the live graph)."""
+    g = _graph(30, 140, 8, seed=2)
+    plan = plan_execution(g, "decentralized", backend="jnp", sample=4,
+                          n_clusters=2)
+    cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(8,), out_dim=4, sample=4)
+    params = gnn.init_params(jax.random.key(0), cfg)
+    eng = IncrementalEngine(plan, cfg, params)
+    eng.full_refresh()
+    rng = np.random.default_rng(3)
+    d = GraphDelta(g.n_nodes).update_features(
+        [2, 8], rng.normal(size=(2, 8)).astype(np.float32))
+    d.add_edges([6], [19])
+    eng.apply_delta(d)
+    out = plan.scatter(np.asarray(plan.make_forward(cfg)(params)))
+    np.testing.assert_allclose(out, eng.embeddings(), atol=1e-5)
+
+
+def test_delta_rejects_out_of_range_ids():
+    d = GraphDelta(10)
+    with pytest.raises(IndexError):
+        d.update_features([10], np.zeros((1, 3), np.float32))
+    with pytest.raises(IndexError):
+        d.add_edges([0], [-1])
+
+
+# ---- frontier: exact k-hop masks over the sampled adjacency -------------
+
+def _chain_graph(n=6, f=4):
+    """Row i reads node i-1 (row 0 empty): dirt at 0 walks one hop/layer."""
+    indptr = np.concatenate([[0], np.arange(n)]).astype(np.int64)
+    indices = np.arange(n - 1, dtype=np.int32)
+    return Graph(indptr, indices, np.ones(n - 1, np.float32),
+                 np.zeros((n, f), np.float32))
+
+
+def test_frontier_walks_one_hop_per_layer_and_ignores_padding():
+    g = _chain_graph(6)
+    nbr, wts = g.neighbor_sample(4)
+    fd = np.zeros(6, bool)
+    fd[0] = True
+    fr = expand_frontier(nbr, wts, fd, np.zeros(6, bool), 3)
+    # row 0 has padding slots pointing at index 0 with weight 0: rows > l
+    # must stay clean even though node 0 is dirty
+    assert set(np.nonzero(fr.masks[1])[0]) == {0, 1}
+    assert set(np.nonzero(fr.masks[2])[0]) == {0, 1, 2}
+    assert set(np.nonzero(fr.masks[3])[0]) == {0, 1, 2, 3}
+    assert 0.0 < fr.recompute_fraction() < 1.0
+
+
+def test_frontier_monotone_and_structure_dirty_everywhere():
+    g = _graph(50, 300, 4, seed=7)
+    nbr, wts = g.neighbor_sample(6)
+    rng = np.random.default_rng(0)
+    fd = rng.random(50) < 0.1
+    sd = rng.random(50) < 0.05
+    fr = expand_frontier(nbr, wts, fd, sd, 3)
+    for l in range(1, 3):
+        assert not (fr.masks[l] & ~fr.masks[l + 1]).any()   # monotone
+    for l in range(1, 4):
+        assert (fr.masks[l] | ~sd).all()                    # sd always dirty
+
+
+# ---- incremental == full on every backend x setting ---------------------
+
+@pytest.mark.parametrize("setting", SETTINGS)
+@pytest.mark.parametrize("backend", gnn.BACKENDS)
+def test_incremental_matches_full_recompute(setting, backend):
+    g = _graph(30, 140, 8, seed=2)
+    k = None if setting == "centralized" else 2
+    plan = plan_execution(g, setting, backend=backend, sample=4,
+                          n_clusters=k)
+    cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(8,), out_dim=4, sample=4)
+    params = gnn.init_params(jax.random.key(0), cfg)
+    eng = IncrementalEngine(plan, cfg, params)
+    eng.full_refresh()
+
+    rng = np.random.default_rng(5)
+    # tick 1: feature churn; tick 2: feature + structural churn
+    d = GraphDelta(g.n_nodes).update_features(
+        [3, 11], rng.normal(size=(2, 8)).astype(np.float32))
+    upd = eng.apply_delta(d)
+    assert not upd.full and upd.recompute_fraction < 1.0
+    d = GraphDelta(g.n_nodes)
+    d.update_features([7], rng.normal(size=(1, 8)).astype(np.float32))
+    d.add_edges([4, 9], [22, 1]).remove_edges([3], [g.indices[g.indptr[3]]]
+                                              if g.indptr[4] > g.indptr[3]
+                                              else [0])
+    eng.apply_delta(d)
+
+    fresh = plan_execution(eng.graph, setting, backend=backend, sample=4,
+                           n_clusters=k)
+    ref = fresh.scatter(np.asarray(fresh.make_forward(cfg)(params)))
+    err = np.abs(eng.embeddings() - ref).max()
+    assert err < 1e-4, (setting, backend, err)
+
+
+def test_bit_accurate_numerics_degrade_to_full_refresh():
+    """The global DAC scale couples every row: incremental must fall back
+    to a full refresh rather than quantize against a stale max|Z|."""
+    g = _graph(30, 140, 8, seed=2)
+    plan = plan_execution(g, "centralized", backend="jnp", sample=4)
+    cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(8,), out_dim=4, sample=4,
+                        numerics=CrossbarNumerics(ideal=False))
+    params = gnn.init_params(jax.random.key(0), cfg)
+    eng = IncrementalEngine(plan, cfg, params)
+    eng.full_refresh()
+    d = GraphDelta(g.n_nodes).update_features(
+        [0], np.ones((1, 8), np.float32) * 3)
+    upd = eng.apply_delta(d)
+    assert upd.full and upd.recompute_fraction == 1.0
+    fresh = plan_execution(eng.graph, "centralized", backend="jnp", sample=4)
+    ref = fresh.scatter(np.asarray(fresh.make_forward(cfg)(params)))
+    assert np.abs(eng.embeddings() - ref).max() < 1e-4
+
+
+# ---- incremental traffic invariants -------------------------------------
+
+@pytest.mark.parametrize("setting", ("decentralized", "semi"))
+def test_incremental_traffic_bounded_by_full(setting):
+    from repro.distributed.traffic import measure_execution
+    g = _graph(60, 400, 8, seed=4)
+    plan = plan_execution(g, setting, backend="jnp", sample=4, n_clusters=3)
+    cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(8,), out_dim=4, sample=4)
+    params = gnn.init_params(jax.random.key(0), cfg)
+    eng = IncrementalEngine(plan, cfg, params)
+    eng.full_refresh()
+    rng = np.random.default_rng(1)
+    d = GraphDelta(g.n_nodes).update_features(
+        [0, 5], rng.normal(size=(2, 8)).astype(np.float32))
+    upd = eng.apply_delta(d)
+    full = measure_execution(plan, cfg=cfg, mode="alltoall")
+    assert upd.traffic.total_bytes() <= full.total_bytes()
+    # per layer, per pair: incremental rows never exceed the full exchange
+    assert (upd.traffic.tier1_rows <= full.tier1_rows[None]).all()
+    if setting == "semi":
+        assert (upd.traffic.tier0_rows <= full.tier0_rows).all()
+        assert upd.traffic.tier0_rows.sum() == 2   # the two mutated rows
+
+
+def test_empty_delta_recomputes_and_ships_nothing():
+    g = _graph(40, 200, 8, seed=6)
+    plan = plan_execution(g, "decentralized", backend="jnp", sample=4,
+                          n_clusters=3)
+    cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(8,), out_dim=4, sample=4)
+    eng = IncrementalEngine(plan, cfg,
+                            gnn.init_params(jax.random.key(0), cfg))
+    eng.full_refresh()
+    before = eng.embeddings().copy()
+    upd = eng.apply_delta(GraphDelta(g.n_nodes))
+    assert upd.recompute_fraction == 0.0
+    assert upd.traffic.total_bytes() == 0
+    np.testing.assert_array_equal(eng.embeddings(), before)
+
+
+# ---- StreamingGNNServer policies ---------------------------------------
+
+def _streaming_server(policy="eager", **kw):
+    g = _graph(40, 200, 12, seed=8)
+    plan = plan_execution(g, "decentralized", backend="jnp", sample=4,
+                          n_clusters=3)
+    cfg = gnn.GNNConfig(in_dim=12, hidden_dims=(8,), out_dim=4, sample=4)
+    srv = StreamingGNNServer(plan, cfg, policy=policy, **kw)
+    srv.refresh()
+    return srv, g
+
+
+def _tick(srv, g, seed):
+    rng = np.random.default_rng(seed)
+    nodes = rng.choice(g.n_nodes, 3, replace=False)
+    return srv.ingest(nodes=nodes,
+                      rows=rng.normal(size=(3, g.feature_len)))
+
+
+def test_eager_policy_commits_every_tick():
+    srv, g = _streaming_server("eager")
+    for t in range(3):
+        assert _tick(srv, g, t) is not None
+    assert srv.commits == 4 and srv.full_refreshes == 1   # 1 = cold start
+    assert all(not u.full for u in srv.updates[1:])
+
+
+def test_interval_policy_buffers_between_commits():
+    srv, g = _streaming_server("interval", interval=3)
+    assert _tick(srv, g, 0) is None and _tick(srv, g, 1) is None
+    upd = _tick(srv, g, 2)
+    assert upd is not None and srv.pending_ticks == 0
+    # the buffered three ticks' nodes are all in the committed frontier
+    assert upd.frontier.masks[0].sum() >= 3
+
+
+def test_bounded_staleness_triggers_on_dirty_fraction():
+    srv, g = _streaming_server("bounded-staleness", max_staleness=100,
+                               max_dirty_frac=0.2)
+    committed = 0
+    for t in range(12):
+        if _tick(srv, g, t) is not None:
+            committed += 1
+            assert not srv._pending_dirty.any()
+    assert committed >= 1               # 3 fresh nodes/tick over 40 nodes
+    assert srv.commits < 13             # ... but not every tick
+
+
+def test_flush_and_param_update_force_full_refresh():
+    srv, g = _streaming_server("interval", interval=100)
+    _tick(srv, g, 0)
+    assert srv.flush() is not None and srv.flush() is None
+    srv.update_params(gnn.init_params(jax.random.key(9), srv.cfg))
+    _tick(srv, g, 1)
+    upd = srv.flush()
+    assert upd is not None and upd.full          # params moved: full rebuild
+    assert srv.full_refreshes == 2
+
+
+def test_streaming_query_serves_policy_bounded_staleness():
+    srv, g = _streaming_server("interval", interval=5)
+    before = srv.query(np.arange(4)).copy()
+    _tick(srv, g, 0)
+    np.testing.assert_array_equal(srv.query(np.arange(4)), before)  # stale
+    srv.flush()
+    assert not np.allclose(srv.query(np.arange(4)), before)

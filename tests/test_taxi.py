@@ -23,6 +23,20 @@ def _setup(n=30):
     return cfg, params, neighbors, weights, key
 
 
+def test_init_params_relational_shapes():
+    """w_rel must be one independent glorot transform per edge type
+    (regression: a dead ``[...] * 0 +`` artifact used to sit in the
+    construction; the per-edge-type fold_in keys are the contract)."""
+    cfg = taxi.TaxiConfig(m=4, n=4, hidden=16, n_edge_types=3)
+    params = taxi.init_params(jax.random.key(0), cfg)
+    assert params["w_rel"].shape == (cfg.n_edge_types, cfg.region,
+                                     cfg.hidden)
+    # fold_in keys: the per-type slices are distinct transforms
+    for r in range(1, cfg.n_edge_types):
+        assert not np.allclose(params["w_rel"][0], params["w_rel"][r])
+    assert params["w_self"].shape == (cfg.region, cfg.hidden)
+
+
 def test_forward_shapes_no_nan():
     cfg, params, nbr, wts, key = _setup()
     x = taxi.synthetic_stream(key, 30, cfg.p_hist, cfg)
