@@ -1,0 +1,286 @@
+"""High-throughput load harness: closed+open-loop serving benchmark.
+
+Drives batched embedding queries *and* churn ticks through
+``StreamingGNNServer`` per configuration (setting × backend × refresh
+policy) and reports measured serving behaviour — the runtime counterpart
+of the planner's model (DESIGN.md §10):
+
+  * **closed loop** — one client issues query batches back-to-back;
+    latency is pure service time, throughput is the server's capacity.
+  * **open loop**   — batches arrive on a Poisson process at ``--rate``
+    regardless of completion (a virtual arrival clock against measured
+    service times), so queueing delay is visible: p99 blows up as the
+    rate approaches capacity, exactly what an SLO check needs.
+
+Churn ticks are interleaved every ``--tick-every`` requests; a commit
+blocks the serving thread (the incremental refresh runs on the device that
+answers queries), so refresh cost shows up in the tail percentiles.
+``--auto`` additionally runs the planner's recommended config with a
+``ReplanMonitor`` attached and reports any online re-plans.
+
+Usage:
+  PYTHONPATH=src python benchmarks/load_serve.py            # full sweep
+  PYTHONPATH=src python benchmarks/load_serve.py --smoke    # CI gate
+
+METRICS follows the determinism convention (benchmarks/run.py): measured
+wall-clock quantities live under ``"timing"`` keys; everything else is a
+deterministic function of seed+argv.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import gnn  # noqa: E402
+from repro.core.graph import dataset_like  # noqa: E402
+from repro.streaming import StreamingGNNServer  # noqa: E402
+
+SETTINGS = ("centralized", "decentralized", "semi")
+SMOKE_ARGV = ["--smoke"]
+METRICS: dict = {}
+
+
+def percentiles(lats) -> dict:
+    if not len(lats):
+        return {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0}
+    p50, p95, p99 = np.percentile(np.asarray(lats, np.float64) * 1e3,
+                                  [50, 95, 99])
+    return {"p50_ms": float(p50), "p95_ms": float(p95), "p99_ms": float(p99)}
+
+
+def _tick(srv, g, rng, churn: float, edge_churn: int):
+    n_mut = max(int(g.n_nodes * churn), 1)
+    nodes = rng.choice(g.n_nodes, n_mut, replace=False)
+    rows = rng.normal(size=(n_mut, g.feature_len)).astype(np.float32)
+    kw = {}
+    if edge_churn:
+        kw["add_edges"] = (rng.integers(0, g.n_nodes, edge_churn),
+                           rng.integers(0, g.n_nodes, edge_churn))
+    return srv.ingest(nodes=nodes, rows=rows, **kw)
+
+
+def closed_loop(srv, g, requests: int, batch: int, rng,
+                churn: float = 0.0, edge_churn: int = 0,
+                tick_every: int = 4, monitor=None) -> dict:
+    """Back-to-back batches from one client; latency == service time."""
+    lats, served, ticks = [], 0, 0
+    t0 = time.perf_counter()
+    for i in range(requests):
+        if churn > 0 and i % tick_every == 0:
+            _tick(srv, g, rng, churn, edge_churn)
+            ticks += 1
+        ids = rng.integers(0, srv.plan.graph.n_nodes, batch)
+        t = time.perf_counter()
+        out = srv.query(ids)
+        lats.append(time.perf_counter() - t)
+        served += len(out)
+        if monitor is not None:
+            monitor.note_queries(len(out))
+    wall = time.perf_counter() - t0
+    return dict(mode="closed", requests=requests, served=served,
+                ticks=ticks, lats=lats, wall_s=wall,
+                qps=served / max(wall, 1e-12))
+
+
+def open_loop(srv, g, requests: int, batch: int, rate: float, rng,
+              churn: float = 0.0, edge_churn: int = 0,
+              tick_every: int = 4, monitor=None) -> dict:
+    """Poisson arrivals at ``rate`` batches/s against a virtual clock.
+
+    The server is a single queue: request i starts at
+    ``max(arrival_i, free)`` where ``free`` is when the previous request
+    (or interleaved commit) finished; reported latency includes the queue
+    wait, so overload shows up as a growing tail, not a lower rate."""
+    arrivals = np.cumsum(rng.exponential(1.0 / max(rate, 1e-9), requests))
+    free, lats, served, ticks = 0.0, [], 0, 0
+    t0 = time.perf_counter()
+    for i, arr in enumerate(arrivals):
+        if churn > 0 and i % tick_every == 0:
+            t = time.perf_counter()
+            _tick(srv, g, rng, churn, edge_churn)
+            free = max(free, arr) + (time.perf_counter() - t)
+            ticks += 1
+        ids = rng.integers(0, srv.plan.graph.n_nodes, batch)
+        start = max(arr, free)
+        t = time.perf_counter()
+        out = srv.query(ids)
+        dt = time.perf_counter() - t
+        free = start + dt
+        lats.append(free - arr)
+        served += len(out)
+        if monitor is not None:
+            monitor.note_queries(len(out))
+    wall = time.perf_counter() - t0
+    return dict(mode="open", requests=requests, served=served, ticks=ticks,
+                rate=rate, lats=lats, wall_s=wall,
+                qps=served / max(arrivals[-1], free, 1e-12))
+
+
+def run_config(g, cfg, setting: str, backend: str, policy: str = "eager",
+               n_clusters: int = 4, requests: int = 64, batch: int = 16,
+               rate: float | None = None, churn: float = 0.02,
+               edge_churn: int = 0, tick_every: int = 4, seed: int = 0,
+               monitor_factory=None) -> dict:
+    """Measure one configuration under both loops; returns the result row.
+
+    ``monitor_factory`` (optional): called with the built server, returns
+    an attached observer (e.g. a ``repro.planner.ReplanMonitor``) whose
+    re-plan events are reported in the row."""
+    import dataclasses
+    from repro.core.partition import plan_execution
+    plan = plan_execution(g, setting, backend=backend,
+                          sample=cfg.sample,
+                          n_clusters=None if setting == "centralized"
+                          else n_clusters, seed=seed)
+    srv = StreamingGNNServer(plan, dataclasses.replace(cfg, backend=backend),
+                             seed=seed, policy=policy)
+    monitor = monitor_factory(srv) if monitor_factory is not None else None
+    t_cold = srv.refresh()
+    rng = np.random.default_rng(seed)
+    closed = closed_loop(srv, g, requests, batch, rng, churn=churn,
+                         edge_churn=edge_churn, tick_every=tick_every,
+                         monitor=monitor)
+    # default open-loop rate: 80% of the measured closed-loop capacity —
+    # loaded but sustainable, so the tail reflects commits, not overload
+    eff_rate = rate or 0.8 * closed["requests"] / max(closed["wall_s"], 1e-9)
+    opened = open_loop(srv, g, requests, batch, eff_rate, rng, churn=churn,
+                       edge_churn=edge_churn, tick_every=tick_every,
+                       monitor=monitor)
+    row = dict(setting=setting, backend=backend, policy=policy,
+               n_clusters=plan.n_clusters,
+               requests=requests, batch=batch,
+               served=closed["served"] + opened["served"],
+               ticks=closed["ticks"] + opened["ticks"],
+               commits=srv.commits, full_refreshes=srv.full_refreshes,
+               replans=len(monitor.events) if monitor is not None else 0,
+               timing=dict(cold_refresh_ms=t_cold * 1e3,
+                           closed_qps=closed["qps"],
+                           open_rate=eff_rate, open_qps=opened["qps"],
+                           closed=percentiles(closed["lats"]),
+                           open=percentiles(opened["lats"])))
+    return row
+
+
+def _print_row(r: dict) -> None:
+    t = r["timing"]
+    print(f"{r['setting']:14s} {r['backend']:7s} {r['policy']:18s} "
+          f"{r['served']:6d} {r['commits']:4d} "
+          f"{t['closed_qps']:9.0f} {t['closed']['p50_ms']:8.2f} "
+          f"{t['closed']['p99_ms']:8.2f} {t['open']['p50_ms']:8.2f} "
+          f"{t['open']['p99_ms']:8.2f} {r['replans']:3d}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep + hard asserts (the CI gate)")
+    ap.add_argument("--dataset", default="taxi")
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="open-loop arrival rate, batches/s (default: 80%% "
+                         "of measured closed-loop capacity)")
+    ap.add_argument("--churn", type=float, default=0.02)
+    ap.add_argument("--edge-churn", type=int, default=0)
+    ap.add_argument("--tick-every", type=int, default=4)
+    ap.add_argument("--clusters", type=int, default=4)
+    ap.add_argument("--policy", default="eager",
+                    choices=("eager", "interval", "bounded-staleness"))
+    ap.add_argument("--backends", nargs="*", default=None,
+                    help="backends to sweep (default: fused; full: +jnp)")
+    ap.add_argument("--sample", type=int, default=8)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--auto", action="store_true",
+                    help="also run the planner's recommended config with "
+                         "an online ReplanMonitor attached")
+    args = ap.parse_args()
+
+    scale = 0.008 if args.smoke else args.scale
+    requests = 24 if args.smoke else args.requests
+    backends = tuple(args.backends or
+                     (("fused",) if args.smoke else ("fused", "jnp")))
+
+    g = dataset_like(args.dataset, scale=scale, seed=0).gcn_normalize()
+    cfg = gnn.GNNConfig(in_dim=g.feature_len, hidden_dims=(args.hidden,),
+                        out_dim=16, sample=args.sample)
+
+    print(f"{'setting':14s} {'backend':7s} {'policy':18s} {'served':>6s} "
+          f"{'cmts':>4s} {'qps':>9s} {'c.p50ms':>8s} {'c.p99ms':>8s} "
+          f"{'o.p50ms':>8s} {'o.p99ms':>8s} {'rpl':>3s}")
+    rows = []
+    for setting in SETTINGS:
+        for backend in backends:
+            r = run_config(g, cfg, setting, backend, policy=args.policy,
+                           n_clusters=args.clusters, requests=requests,
+                           batch=args.batch, rate=args.rate,
+                           churn=args.churn, edge_churn=args.edge_churn,
+                           tick_every=args.tick_every)
+            rows.append(r)
+            _print_row(r)
+
+    if args.auto:
+        from repro.planner import ReplanMonitor, WorkloadProfile, plan
+        wl = WorkloadProfile(churn=args.churn, edge_churn=args.edge_churn,
+                             queries_per_tick=args.batch * args.tick_every,
+                             sample=args.sample)
+        result = plan(g, "throughput", wl, shortlist=2)
+        rec = result.recommended.candidate
+        print(f"planner recommends {rec.key}")
+        r = run_config(g, cfg, rec.setting, rec.backend, policy=rec.policy,
+                       n_clusters=rec.n_clusters, requests=requests,
+                       batch=args.batch, rate=args.rate, churn=args.churn,
+                       edge_churn=args.edge_churn,
+                       tick_every=args.tick_every,
+                       monitor_factory=lambda srv:
+                       ReplanMonitor(result).attach(srv))
+        r["auto"] = True
+        rows.append(r)
+        _print_row(r)
+
+    METRICS.clear()
+    METRICS.update(
+        dataset=args.dataset, n_nodes=g.n_nodes, requests=requests,
+        batch=args.batch, churn=args.churn, backends=list(backends),
+        configs=rows)
+
+    if not args.smoke:
+        return 0
+    failures = []
+    want = requests * args.batch * 2          # closed + open phases
+    for r in rows:
+        t = r["timing"]
+        if r["served"] != want:
+            failures.append(f"{r['setting']}/{r['backend']}: served "
+                            f"{r['served']} != {want}")
+        if r["commits"] < 1:
+            failures.append(f"{r['setting']}/{r['backend']}: no commits "
+                            f"despite churn")
+        for loop in ("closed", "open"):
+            p = t[loop]
+            if not p["p50_ms"] <= p["p95_ms"] <= p["p99_ms"]:
+                failures.append(f"{r['setting']}/{r['backend']} {loop}: "
+                                f"percentiles not monotone {p}")
+        # open-loop latency includes queue wait: its median cannot beat
+        # the closed-loop pure service median
+        if t["open"]["p50_ms"] < t["closed"]["p50_ms"] * 0.5:
+            failures.append(f"{r['setting']}/{r['backend']}: open-loop p50 "
+                            f"below closed-loop service time")
+    if failures:
+        print("SMOKE FAILURES:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print(f"LOAD_SERVE_SMOKE_OK: {len(rows)} configs served {want} lookups "
+          f"each through closed+open loops with monotone latency "
+          f"percentiles and churn commits interleaved")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

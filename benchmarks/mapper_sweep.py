@@ -42,6 +42,7 @@ from repro.mapper.compile import compile_mapping  # noqa: E402
 SIZES = (None, 64, 128, 256, 512)       # None == the paper's geometry
 SETTINGS = ("centralized", "decentralized", "semi")
 SMOKE_ARGV = ["--smoke"]
+METRICS: dict = {}              # filled by main(); run.py --json-out reads it
 
 
 def run_case(name: str, stats, setting: str, size: int | None,
@@ -112,6 +113,10 @@ def main() -> int:
                           f"{r['t_der']:10.3e} {r['ratio']:8.3f} "
                           f"{r['e_cal']:10.3e} {r['e_der']:10.3e} "
                           f"{r['util']:6.1%} {r['occ']:6.1%}")
+
+    METRICS.clear()
+    METRICS.update(iso_cells=args.iso_cells, clusters=args.clusters,
+                   rows=rows)     # fully analytic — seed-deterministic
 
     if not args.smoke:
         return 0

@@ -1,0 +1,235 @@
+"""Planner sweep: self-consistency, hybrid-vs-pure, and serving validation.
+
+Three questions, per dataset (taxi + the Fig.-8 datasets):
+
+  1. **Self-consistency** — does ``repro.planner.plan``'s recommendation
+     match the optimum of an *exhaustive* sweep of its own evaluators?
+     Every candidate in the space is re-scored independently through
+     ``score_candidate`` and the recommendation must be the argmin
+     (within 5% on the objective) — the planner may prune or refine, but
+     it may never disagree with its own pricing.
+  2. **Hybrid vs pure** — on the mixed churn+query workload, does the
+     recommended semi/hybrid plan beat the best pure centralized *and*
+     the best pure decentralized candidate on the combined objective?
+     (The paper's tension, decided: the ~790x-communication and
+     ~1400x-computation winners both lose to the two-tier hybrid once
+     refresh and query drain are priced together.) Plus adaptivity: the
+     same dataset with the queries removed must flip the decision to
+     centralized (Eq. 5's one concurrent transfer wins churn-only), i.e.
+     the planner decides per workload, not per graph.
+  3. **Serving validation** — the recommended and the two pure configs
+     are actually served through ``benchmarks.load_serve.run_config`` on
+     a concrete (scaled) graph; measured p50/p99 latencies land in the
+     ``--json-out`` artifact next to the Pareto frontier.
+
+Usage:
+  PYTHONPATH=src python benchmarks/planner_sweep.py            # full sweep
+  PYTHONPATH=src python benchmarks/planner_sweep.py --smoke    # CI gate
+
+METRICS: deterministic planner decisions + frontier at the top level,
+measured serving numbers under ``"timing"`` keys (benchmarks/run.py's
+determinism convention).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+# direct `python benchmarks/planner_sweep.py` must resolve both repro
+# (src/) and the sibling benchmarks package (load_serve import below)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core.graph import TABLE2_DATASETS, TAXI_STATS  # noqa: E402
+from repro.planner import (WorkloadProfile, candidate_space,  # noqa: E402
+                           plan, score_candidate)
+from repro.planner.evaluate import PlanContext  # noqa: E402
+
+SMOKE_ARGV = ["--smoke"]
+METRICS: dict = {}
+
+# the mixed churn+query serving workload the acceptance gates on: 1% of
+# the nodes move per tick, 64 lookup batches arrive alongside
+MIXED = WorkloadProfile(churn=0.01, queries_per_tick=64, sample=8)
+
+
+def sweep_dataset(name: str, stats, workload: WorkloadProfile,
+                  objective: str = "throughput") -> dict:
+    """Plan one dataset and exhaustively re-validate the recommendation."""
+    result = plan(stats, objective, workload=workload)
+    # independent exhaustive sweep: fresh context, every candidate scored
+    # through the planner's own evaluator chain — no reuse of result.scored
+    ctx = PlanContext(stats, workload)
+    rescored = [score_candidate(c, ctx, objective)
+                for c in candidate_space(stats, workload=workload)]
+    optimum = min(rescored, key=lambda s: s.sort_key)
+    rec = result.recommended
+    pure = {s: result.best(s) for s in
+            ("centralized", "decentralized", "semi")}
+    return dict(
+        name=name, objective=objective,
+        n_candidates=len(rescored),
+        recommended=rec.as_record(),
+        optimum=optimum.as_record(),
+        self_consistent=rec.score <= optimum.score * 1.05,
+        recommended_on_frontier=any(sc.candidate == rec.candidate
+                                    for sc in result.frontier),
+        frontier=[sc.as_record() for sc in result.frontier],
+        pure_scores={s: (p.score if p else None) for s, p in pure.items()},
+        result=result)
+
+
+def serve_validation(rows: list, dataset: str, scale: float,
+                     requests: int, seed: int = 0) -> list:
+    """Serve the recommended + pure configs on a concrete graph through
+    the load harness; returns measured rows (timing under 'timing')."""
+    from benchmarks.load_serve import run_config
+    from repro.core import gnn
+    from repro.core.graph import dataset_like
+    g = dataset_like(dataset, scale=scale, seed=seed).gcn_normalize()
+    cfg = gnn.GNNConfig(in_dim=g.feature_len, hidden_dims=(32,), out_dim=16,
+                        sample=8)
+    taxi_row = next(r for r in rows if r["name"] == dataset)
+    result = taxi_row["result"]
+    out = []
+    for label, sc in [("recommended", result.recommended),
+                      ("pure-centralized", result.best("centralized")),
+                      ("pure-decentralized", result.best("decentralized"))]:
+        c = sc.candidate
+        r = run_config(g, cfg, c.setting, c.backend, policy=c.policy,
+                       n_clusters=min(c.n_clusters, max(g.n_nodes // 4, 1)),
+                       requests=requests, batch=8,
+                       churn=result.workload.churn * 4, tick_every=4,
+                       seed=seed)
+        r["label"] = label
+        r["model_score"] = sc.score
+        out.append(r)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep + hard asserts (the CI gate)")
+    ap.add_argument("--objective", default="throughput",
+                    choices=("latency", "energy", "throughput"))
+    ap.add_argument("--churn", type=float, default=MIXED.churn)
+    ap.add_argument("--queries", type=float, default=MIXED.queries_per_tick)
+    ap.add_argument("--scale", type=float, default=0.02,
+                    help="concrete-graph scale for the serving validation")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--no-serve", action="store_true",
+                    help="skip the measured serving validation")
+    args = ap.parse_args()
+
+    workload = dataclasses.replace(MIXED, churn=args.churn,
+                                   queries_per_tick=args.queries)
+    datasets = {"taxi": TAXI_STATS, "cora": TABLE2_DATASETS["cora"],
+                "citeseer": TABLE2_DATASETS["citeseer"]}
+    if not args.smoke:
+        datasets.update({k: TABLE2_DATASETS[k]
+                         for k in ("collab", "livejournal")})
+
+    print(f"{'dataset':12s} {'recommended':42s} {'score':>10s} "
+          f"{'vs cent':>8s} {'vs dec':>8s} {'optimum?':>9s}")
+    rows = []
+    for name, stats in datasets.items():
+        r = sweep_dataset(name, stats, workload, args.objective)
+        rows.append(r)
+        rec = r["recommended"]
+        cent = r["pure_scores"]["centralized"]
+        dec = r["pure_scores"]["decentralized"]
+        key = (f"{rec['setting']}/k{rec['n_clusters']}/xb{rec['xbar']}"
+               f"/{rec['policy']}")
+        print(f"{name:12s} {key:42s} {rec['score']:10.3e} "
+              f"{cent / rec['score']:7.1f}x {dec / rec['score']:7.1f}x "
+              f"{'yes' if r['self_consistent'] else 'NO':>9s}")
+
+    # adaptivity probes: same graph, different workload => different plan
+    q0 = plan(TAXI_STATS, args.objective,
+              dataclasses.replace(workload, queries_per_tick=0))
+    lat = plan(TAXI_STATS, "latency")
+    print(f"adaptivity: taxi queries=0 -> "
+          f"{q0.recommended.candidate.setting}; "
+          f"latency objective -> {lat.recommended.candidate.setting}")
+
+    serving = []
+    if not args.no_serve:
+        serving = serve_validation(rows, "taxi", args.scale,
+                                   8 if args.smoke else args.requests)
+        for r in serving:
+            t = r["timing"]
+            print(f"serving[{r['label']:18s}] {r['setting']:14s} "
+                  f"p50 {t['closed']['p50_ms']:.2f} ms, "
+                  f"p99 {t['open']['p99_ms']:.2f} ms, "
+                  f"{r['served']} lookups, {r['commits']} commits")
+
+    METRICS.clear()
+    METRICS.update(
+        objective=args.objective,
+        workload=dataclasses.asdict(workload),
+        datasets=[{k: v for k, v in r.items() if k != "result"}
+                  for r in rows],
+        adaptivity=dict(
+            taxi_mixed=rows[0]["recommended"]["setting"],
+            taxi_q0=q0.recommended.candidate.setting,
+            taxi_latency=lat.recommended.candidate.setting),
+        serving=serving)
+
+    if not args.smoke:
+        return 0
+    failures = []
+    for r in rows:
+        if not r["self_consistent"]:
+            failures.append(
+                f"{r['name']}: recommendation {r['recommended']['score']:.3e}"
+                f" is not the exhaustive optimum "
+                f"{r['optimum']['score']:.3e} (±5%)")
+        if not r["recommended_on_frontier"]:
+            failures.append(f"{r['name']}: recommendation off the Pareto "
+                            f"frontier")
+    taxi = rows[0]
+    rec = taxi["recommended"]
+    if rec["setting"] != "semi":
+        failures.append(f"taxi mixed workload: expected the hybrid/semi "
+                        f"setting, got {rec['setting']}")
+    for s in ("centralized", "decentralized"):
+        p = taxi["pure_scores"][s]
+        if not (rec["score"] < p):
+            failures.append(f"taxi: recommended hybrid {rec['score']:.3e} "
+                            f"does not beat pure {s} {p:.3e}")
+    if q0.recommended.candidate.setting != "centralized":
+        failures.append(f"taxi churn-only workload: expected centralized, "
+                        f"got {q0.recommended.candidate.setting}")
+    if len(rows) < 3:
+        failures.append(f"sweep too small: {len(rows)} datasets")
+    for r in serving:
+        if r["served"] <= 0 or r["commits"] < 1:
+            failures.append(f"serving[{r['label']}]: nothing served or no "
+                            f"commits")
+        for loop in ("closed", "open"):
+            p = r["timing"][loop]
+            if not p["p50_ms"] <= p["p99_ms"]:
+                failures.append(f"serving[{r['label']}] {loop}: p50 > p99")
+    if failures:
+        print("SMOKE FAILURES:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print(f"PLANNER_SWEEP_SMOKE_OK: recommendation == exhaustive optimum on "
+          f"{len(rows)} datasets; taxi mixed workload picks semi over both "
+          f"pure settings "
+          f"({taxi['pure_scores']['centralized'] / rec['score']:.1f}x vs "
+          f"centralized, "
+          f"{taxi['pure_scores']['decentralized'] / rec['score']:.1f}x vs "
+          f"decentralized); churn-only flips to centralized; "
+          f"{len(serving)} configs load-validated")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,6 +14,14 @@ callable ``main() -> int`` is a benchmark. Module conventions:
     return code, wall-clock, git sha) as ``DIR/BENCH_<name>.json`` — the
     perf-trajectory artifact the CI smoke gate uploads on every PR.
 
+Determinism convention: everything in ``METRICS`` must be a pure function
+of (seed, argv) — running a ``--smoke`` bench twice must reproduce it
+byte-identically (regression-tested in tests/test_bench_determinism.py).
+Measured wall-clock quantities are the sanctioned exception: they live
+under keys named ``timing`` (any nesting level), which
+``canonical_metrics`` strips alongside the runner's own volatile fields
+(``seconds``, ``git_sha``) before any artifact comparison.
+
 ``python -m benchmarks.run`` runs everything and exits non-zero on any
 paper-validation mismatch; ``--smoke`` runs every bench's smoke path (the
 CI gate — registry drift or bench breakage fails the build);
@@ -61,6 +69,23 @@ def discover(names: list | None = None) -> dict:
             sys.exit(f"{name} is a library module (no main()); "
                      f"candidates: {candidates}")
     return registry
+
+
+# keys holding measured wall-clock (or equivalently volatile) values —
+# excluded from artifact determinism comparisons at any nesting depth
+VOLATILE_KEYS = frozenset({"timing", "seconds", "git_sha"})
+
+
+def canonical_metrics(obj, volatile: frozenset = VOLATILE_KEYS):
+    """The deterministic projection of a METRICS dict / BENCH record:
+    volatile keys dropped recursively, dict keys sorted — two runs of the
+    same bench with the same seed+argv must serialize identically."""
+    if isinstance(obj, dict):
+        return {k: canonical_metrics(obj[k], volatile)
+                for k in sorted(obj) if k not in volatile}
+    if isinstance(obj, (list, tuple)):
+        return [canonical_metrics(v, volatile) for v in obj]
+    return obj
 
 
 def _git_sha() -> str:

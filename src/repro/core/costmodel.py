@@ -202,6 +202,32 @@ def communicate_latency(setting: Setting, stats: GraphStats,
     return hw.t_ln + 2.0 * adj_heads * hw.t_ln
 
 
+def refresh_communicate_latency(setting: Setting, stats: GraphStats,
+                                hw: HardwareParams = DEFAULT_HW,
+                                n_clusters: int = 1,
+                                dirty_frac: float = 1.0) -> float:
+    """Communication latency of one *incremental* refresh commit whose
+    dirty frontier covers ``dirty_frac`` of the rows (Eqs. 4/5 scaled to
+    the streaming runtime's dirty-rows-only exchange — DESIGN.md §9/§10).
+
+    The fixed per-commit parts survive any frontier: the centralized
+    inter-network transfer is one concurrent upload regardless of how many
+    rows move (Eq. 5), decentralized peers still pay connection
+    establishment ``t_e``, and a semi spoke→head upload is one concurrent
+    intra-region hop. Only the per-row parts — sequential ad-hoc peer hops
+    (Eq. 4) and head↔head boundary rows — scale with the dirty share.
+    ``dirty_frac=1`` recovers ``communicate_latency`` exactly.
+    """
+    frac = min(max(dirty_frac, 0.0), 1.0)
+    if setting == "centralized":
+        return hw.t_ln
+    if setting == "decentralized":
+        return (hw.t_e + frac * stats.avg_cs * hw.t_lc) * 2.0
+    assert setting == "semi", setting
+    adj_heads = min(max(n_clusters - 1, 0), 6)
+    return hw.t_ln + frac * 2.0 * adj_heads * hw.t_ln
+
+
 def power(setting: Setting, stats: GraphStats,
           hw: HardwareParams = DEFAULT_HW, gnn_layers: int = 2,
           alpha: tuple | None = None) -> tuple:

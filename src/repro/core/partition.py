@@ -442,6 +442,10 @@ def plan_execution(g: Graph, setting: str = "centralized",
         return ExecutionPlan(setting, backend, sample, 1, g, None, None,
                              g.features[None], nbr[None], wts[None])
     k = n_clusters or (8 if setting == "decentralized" else 4)
+    # a cluster must own at least one node: planner sweeps over tiny test
+    # graphs would otherwise build empty devices (configuration-space
+    # robustness, DESIGN.md §10)
+    k = max(min(k, g.n_nodes), 1)
     if setting == "semi":
         hier = hier_partition(g, k, nodes_per_region=spokes_per_head,
                               sample=sample, seed=seed)

@@ -202,6 +202,26 @@ def measure_incremental(plan, halo_plan, dirty_locals: np.ndarray,
     return StreamingTrafficReport(plan.setting, mode, dims, tier0, tier1)
 
 
+def modeled_frontier(part, seed_frac: float, frac: float,
+                     n_layers: int) -> np.ndarray:
+    """Deterministic pseudo-frontier in owned-row layout for modeled
+    incremental billing: level 0 covers the first ``ceil(seed_frac * n)``
+    owned rows of each device (the churn seeds), levels 1..L the first
+    ``ceil(frac * n)`` (the expanded dirty share). The planner's traffic
+    evaluator feeds this to ``measure_incremental`` when it has a concrete
+    partition but only a *modeled* churn profile (DESIGN.md §10); the
+    streaming engine's measured masks supersede it at serve time."""
+    k, n_max = part.local_mask.shape
+    n_rows = part.local_mask.sum(axis=1)
+    levels = np.zeros((n_layers + 1, k, n_max), bool)
+    for level in range(n_layers + 1):
+        f = min(max(seed_frac if level == 0 else frac, 0.0), 1.0)
+        for c in range(k):
+            take = int(np.ceil(n_rows[c] * f))
+            levels[level, c, :take] = part.local_mask[c, :take]
+    return levels
+
+
 def measure_execution(plan, cfg=None, mode: str = "alltoall") -> TrafficReport:
     """Build the TrafficReport for an ExecutionPlan (any setting).
 

@@ -19,6 +19,11 @@ recomputed-node fraction and measured incremental traffic (DESIGN.md §9):
 
   PYTHONPATH=src python -m repro.launch.gnn --setting decentralized \
       --stream 16 --churn 0.05 --policy bounded-staleness
+
+``--plan auto`` delegates the configuration choice to the adaptive planner
+(``repro.planner``, DESIGN.md §10): setting, backend, cluster count, and
+refresh policy come from the planner's recommendation for this dataset's
+statistics and the requested churn/query workload.
 """
 from __future__ import annotations
 
@@ -178,9 +183,25 @@ def main() -> None:
     ap.add_argument("--policy", default="eager",
                     choices=("eager", "interval", "bounded-staleness"),
                     help="stream mode: refresh policy")
+    ap.add_argument("--plan", default="manual", dest="plan_mode",
+                    choices=("manual", "auto"),
+                    help="auto: let repro.planner pick setting/backend/"
+                         "clusters/policy for this workload (DESIGN.md §10)")
     args = ap.parse_args()
 
     g = dataset_like(args.dataset, scale=args.scale, seed=0).gcn_normalize()
+    if args.plan_mode == "auto":
+        from repro.planner import WorkloadProfile, plan as plan_search
+        wl = WorkloadProfile(
+            churn=args.churn if args.stream else 0.0,
+            queries_per_tick=float(args.batch),
+            sample=args.sample)
+        objective = "throughput" if args.stream else "latency"
+        result = plan_search(g, objective, workload=wl, shortlist=2)
+        print(result.summary())
+        rec = result.recommended.candidate
+        args.setting, args.backend = rec.setting, rec.backend
+        args.clusters, args.policy = rec.n_clusters, rec.policy
     n_dev = len(jax.devices())
     k = args.clusters or (n_dev if args.setting == "decentralized" else 4)
     plan = plan_execution(g, args.setting, backend=args.backend,

@@ -1,0 +1,44 @@
+"""Adaptive hybrid execution planner (DESIGN.md §10).
+
+The paper's cross-layer results are a tension, not a verdict: centralized
+wins communication ~790x, decentralized wins computation ~1400x, and the
+authors call for a hybrid. This package decides instead of tabulating:
+given graph statistics, a crossbar inventory, and a churn/query workload
+profile, it searches ``setting × backend × cluster count × crossbar size ×
+refresh policy`` through pluggable evaluators — the calibrated Eqs. 1-7
+cost model, the first-principles mapper rollup, and measured traffic on
+the executed exchange tables — and returns a Pareto frontier plus one
+recommended, materializable ``ExecutionPlan``. ``ReplanMonitor`` closes
+the loop online: when a serving ``StreamingGNNServer``'s measured tick
+latency or traffic drifts from the prediction, the planner re-runs on the
+live graph with the measured workload and swaps the plan in place.
+
+    from repro.planner import WorkloadProfile, plan
+    result = plan(graph, "throughput",
+                  WorkloadProfile(churn=0.01, queries_per_tick=64))
+    server = StreamingGNNServer(result.build_plan(graph), cfg)
+
+Validated by ``benchmarks/planner_sweep.py`` (self-consistency vs an
+exhaustive sweep of the planner's own evaluators; hybrid-vs-pure on the
+mixed workload) and ``benchmarks/load_serve.py`` (measured serving
+throughput / latency percentiles per config).
+"""
+from .evaluate import (DEFAULT_EVALUATORS, PlanContext, cost_evaluator,
+                       evaluate, mapper_evaluator, traffic_evaluator)
+from .objective import OBJECTIVES, effective_compute, score, tick_costs
+from .plan import (PlannerResult, ScoredCandidate, pareto_frontier, plan,
+                   score_candidate)
+from .replan import ReplanEvent, ReplanMonitor
+from .space import (BACKENDS, POLICIES, SETTINGS, Candidate,
+                    WorkloadProfile, candidate_space)
+
+__all__ = [
+    "BACKENDS", "POLICIES", "SETTINGS",
+    "Candidate", "WorkloadProfile", "candidate_space",
+    "DEFAULT_EVALUATORS", "PlanContext", "cost_evaluator", "evaluate",
+    "mapper_evaluator", "traffic_evaluator",
+    "OBJECTIVES", "effective_compute", "score", "tick_costs",
+    "PlannerResult", "ScoredCandidate", "pareto_frontier", "plan",
+    "score_candidate",
+    "ReplanEvent", "ReplanMonitor",
+]

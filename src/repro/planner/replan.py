@@ -1,0 +1,188 @@
+"""Online re-planning: watch a StreamingGNNServer, re-plan on drift.
+
+The planner's recommendation is a prediction; serving is the measurement.
+``ReplanMonitor`` attaches to a ``StreamingGNNServer`` through its commit
+observer hook and, per committed tick, records measured commit wall-clock
+and incremental traffic bytes. Drift is declared when either signal's
+recent median leaves the tolerance band around its reference:
+
+  * latency  — reference is the rolling baseline established over the
+    first ``window`` commits (modeled crossbar/radio time and host
+    wall-clock are different clocks, so the latency prediction is
+    anchored to the candidate's own early measurements);
+  * traffic  — reference is the planner's predicted ``bytes_per_tick``
+    when the traffic evaluator priced it, else the early-commit baseline.
+
+On drift the monitor re-estimates the workload from what the stream
+actually did (measured churn from the level-0 frontier masks, measured
+query rate from the server's counters), re-runs ``plan`` on the live
+graph, and — when the recommendation's (setting, n_clusters, backend)
+differs from the serving config — builds the new ``ExecutionPlan`` and
+swaps it in via ``server.update_plan``. Every decision is appended to
+``self.events`` so the load harness can report re-plan behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+
+from .plan import PlannerResult, plan
+from .space import Candidate, WorkloadProfile
+
+
+@dataclasses.dataclass
+class ReplanEvent:
+    tick: int
+    reason: str                     # "latency" | "traffic"
+    measured: float
+    reference: float
+    old: Candidate
+    new: Candidate
+    swapped: bool
+    workload: WorkloadProfile       # the measured profile the re-plan used
+
+
+class ReplanMonitor:
+    """Commit observer: drift detection + re-plan for a streaming server.
+
+    ``tol`` is the multiplicative drift band (median of the last
+    ``window`` commits vs the reference); ``cooldown`` commits must pass
+    between re-plans so one burst cannot thrash the partition.
+    """
+
+    def __init__(self, result: PlannerResult, window: int = 8,
+                 tol: float = 3.0, cooldown: int = 16,
+                 shortlist: int = 0):
+        self.result = result
+        self.window = max(int(window), 2)
+        self.tol = float(tol)
+        self.cooldown = max(int(cooldown), 1)
+        self.shortlist = shortlist
+        self.seconds: list = []
+        self.bytes: list = []
+        self.churn: list = []
+        self.queries_seen = 0
+        self.events: list = []
+        self._baseline_s: float | None = None
+        self._last_replan = -(10 ** 9)
+        # the policy the observed server actually commits under (refreshed
+        # on every commit): drift scaling must follow the real cadence,
+        # not the recommendation's, should the two ever diverge
+        self._server_policy: str | None = None
+
+    # ---- wiring ---------------------------------------------------------
+
+    def attach(self, server) -> "ReplanMonitor":
+        server.add_observer(self)
+        return self
+
+    @property
+    def serving(self) -> Candidate:
+        return self.result.recommended.candidate
+
+    # ---- observation ----------------------------------------------------
+
+    def __call__(self, server, update) -> None:
+        if update.full:
+            # cold starts, param swaps, and bit-accurate degradations are
+            # full refreshes — not representative ticks; folding their
+            # wall-clock/traffic into the baseline would mask real drift
+            return
+        self._server_policy = getattr(server, "policy", None)
+        self.seconds.append(update.seconds)
+        self.bytes.append(float(update.traffic.total_bytes())
+                          if update.traffic is not None else 0.0)
+        self.churn.append(float(update.frontier.masks[0].mean()))
+        n = len(self.seconds)
+        if self._baseline_s is None and n >= self.window:
+            self._baseline_s = statistics.median(self.seconds[:self.window])
+        drift = self._drift()
+        if drift is not None and n - self._last_replan >= self.cooldown:
+            self._last_replan = n
+            self._replan(server, *drift)
+
+    def _drift(self) -> tuple | None:
+        """(reason, measured, reference) when out of band, else None."""
+        if len(self.seconds) < 2 * self.window:
+            return None
+        recent_s = statistics.median(self.seconds[-self.window:])
+        if self._baseline_s and recent_s > self.tol * self._baseline_s:
+            return ("latency", recent_s, self._baseline_s)
+        predicted = self.result.recommended.metrics.get("bytes_per_tick")
+        if predicted:
+            # the measured series is per *commit*; the prediction is per
+            # tick — scale it up by the serving policy's commit interval
+            # or every non-eager policy would look like steady-state drift
+            ref_b = predicted * max(self._commit_ticks(), 1)
+        else:
+            ref_b = statistics.median(self.bytes[:self.window])
+        recent_b = statistics.median(self.bytes[-self.window:])
+        if ref_b and recent_b > self.tol * ref_b:
+            return ("traffic", recent_b, ref_b)
+        return None
+
+    # ---- decision -------------------------------------------------------
+
+    def _commit_ticks(self) -> int:
+        """Ticks per commit under the policy the server really runs."""
+        policy = self._server_policy or self.serving.policy
+        return max(self.result.workload.commit_interval(policy), 1)
+
+    def measured_workload(self) -> WorkloadProfile:
+        """The workload the stream actually presented, in per-*tick* units:
+        a commit's level-0 frontier accumulates ``commit_interval`` ticks
+        of churn (and its query counter that many ticks of lookups), so
+        both measurements are divided back down before they parameterize
+        the re-plan — feeding per-commit rates in would make every
+        non-eager policy look like an extreme-churn workload."""
+        wl = self.result.workload
+        ticks = self._commit_ticks()
+        recent = self.churn[-self.window:] or [wl.churn * ticks]
+        commits = max(len(self.seconds), 1)
+        return dataclasses.replace(
+            wl, churn=min(1.0, statistics.median(recent) / ticks),
+            queries_per_tick=max(self.queries_seen / (commits * ticks),
+                                 wl.queries_per_tick))
+
+    def note_queries(self, n: int) -> None:
+        """Load generators report served lookups here so the re-planned
+        workload sees the real query mix."""
+        self.queries_seen += int(n)
+
+    def _replan(self, server, reason: str, measured: float,
+                reference: float) -> None:
+        old = self.serving
+        at_commit = len(self.churn)
+        measured_wl = self.measured_workload()
+        new_result = plan(server.plan.graph, self.result.objective,
+                          workload=measured_wl,
+                          hw=self.result.ctx.hw,
+                          inventory=self.result.ctx.inventory,
+                          shortlist=self.shortlist)
+        new = new_result.recommended.candidate
+        swap = (new.setting, new.n_clusters, new.backend) != \
+            (old.setting, old.n_clusters, old.backend)
+        if swap:
+            server.update_plan(new_result.build_plan(server.plan.graph))
+            # the recommendation is (plan, policy) — install both, and the
+            # measured workload's policy knobs with it, so the server
+            # commits on the cadence the scores assumed
+            server.policy = new.policy
+            server.interval = measured_wl.interval
+            server.max_staleness = measured_wl.max_staleness
+            server.max_dirty_frac = measured_wl.max_dirty_frac
+        self.result = new_result
+        # the serving config changed: measured baselines describe the old
+        # plan, so restart drift detection (and the cooldown clock, which
+        # counts the same list — leaving it at the pre-clear count would
+        # silently double the effective cooldown) from fresh observations
+        if swap:
+            self.seconds.clear()
+            self.bytes.clear()
+            self.churn.clear()
+            self.queries_seen = 0
+            self._baseline_s = None
+            self._last_replan = 0
+        self.events.append(ReplanEvent(at_commit, reason, measured,
+                                       reference, old, new, swap,
+                                       measured_wl))

@@ -1,0 +1,178 @@
+"""The planner's configuration space: candidates and workload profiles.
+
+A ``Candidate`` is one point of the discrete space the planner searches —
+``setting × backend × cluster count × crossbar size × refresh policy`` —
+i.e. everything that must be decided *before* an ``ExecutionPlan`` can be
+built and a ``StreamingGNNServer`` brought up. ``WorkloadProfile`` is the
+demand side: how much of the graph churns per tick, how many embedding
+lookups arrive alongside, and the serving knobs (sample size, GNN depth,
+refresh-policy parameters) the combined-objective model needs.
+
+Dependency-light by design (numpy only): the evaluators pull in
+``repro.core`` / ``repro.mapper`` lazily, so the space can be enumerated
+and serialized without touching jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+SETTINGS = ("centralized", "decentralized", "semi")
+BACKENDS = ("jnp", "pallas", "fused")
+POLICIES = ("eager", "interval", "bounded-staleness")
+
+# deterministic tie-break: when two candidates score identically the planner
+# prefers the faster measured backend (fused keeps Z in VMEM — DESIGN.md §5)
+BACKEND_RANK = {"fused": 0, "pallas": 1, "jnp": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the planner's search space.
+
+    ``n_clusters`` is the device-side parallelism knob: 1 for centralized
+    (by construction), cluster heads for semi, runtime clusters for
+    decentralized (the paper's decentralized setting is one node per
+    device; the cost model prices it that way regardless, so decentralized
+    candidates carry a single representative cluster count for the
+    concrete runtime). ``xbar_size`` re-geometries the MVM crossbars via
+    ``XbarInventory.with_xbar_size`` (None = the paper's geometry).
+    """
+    setting: str
+    backend: str = "fused"
+    n_clusters: int = 1
+    xbar_size: int | None = None
+    policy: str = "eager"
+
+    def __post_init__(self):
+        if self.setting not in SETTINGS:
+            raise ValueError(f"unknown setting {self.setting!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}")
+        if self.n_clusters < 1:
+            raise ValueError(f"n_clusters must be >= 1, got {self.n_clusters}")
+        if self.setting == "centralized" and self.n_clusters != 1:
+            raise ValueError("centralized implies n_clusters == 1")
+
+    @property
+    def key(self) -> str:
+        xb = "paper" if self.xbar_size is None else str(self.xbar_size)
+        return (f"{self.setting}/{self.backend}/k{self.n_clusters}"
+                f"/xb{xb}/{self.policy}")
+
+    def build_plan(self, graph, sample: int, seed: int = 0,
+                   spokes_per_head: int = 4):
+        """Materialize this candidate as a runnable ``ExecutionPlan``."""
+        from repro.core.partition import plan_execution
+        k = None if self.setting == "centralized" else self.n_clusters
+        return plan_execution(graph, self.setting, backend=self.backend,
+                              sample=sample, n_clusters=k, seed=seed,
+                              spokes_per_head=spokes_per_head)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    """The demand profile the combined objective prices a candidate under.
+
+    ``churn`` — fraction of node feature rows mutated per stream tick;
+    ``edge_churn`` — structural edge events per tick;
+    ``queries_per_tick`` — embedding lookups arriving per tick;
+    ``gnn_layers`` / ``sample`` — model depth and the runtime's neighbor
+    sample (bounds how far dirt propagates per layer);
+    ``interval`` / ``max_staleness`` / ``max_dirty_frac`` — the refresh
+    policies' parameters, mirroring ``StreamingGNNServer``'s;
+    ``slo_s`` — optional per-query latency bound for the throughput
+    objective (a candidate whose queue wait exceeds it is infeasible).
+    """
+    churn: float = 0.0
+    edge_churn: int = 0
+    queries_per_tick: float = 0.0
+    gnn_layers: int = 2
+    sample: int = 8
+    interval: int = 4
+    max_staleness: int = 8
+    max_dirty_frac: float = 0.25
+    slo_s: float | None = None
+
+    def __post_init__(self):
+        if not 0.0 <= self.churn <= 1.0:
+            raise ValueError(f"churn must be in [0, 1], got {self.churn}")
+        if self.queries_per_tick < 0 or self.edge_churn < 0:
+            raise ValueError("negative workload rates")
+        if self.gnn_layers < 1 or self.sample < 1:
+            raise ValueError("gnn_layers and sample must be >= 1")
+
+    @property
+    def mutating(self) -> bool:
+        return self.churn > 0 or self.edge_churn > 0
+
+    def commit_interval(self, policy: str) -> int:
+        """Ticks between refresh commits under ``policy`` (>= 1).
+
+        ``eager`` commits every tick; ``interval`` every ``interval``
+        ticks; ``bounded-staleness`` when the buffered dirty fraction
+        reaches ``max_dirty_frac`` (or ``max_staleness`` ticks, whichever
+        comes first) — the same triggers ``StreamingGNNServer`` applies.
+        """
+        if policy == "eager" or not self.mutating:
+            return 1
+        if policy == "interval":
+            return max(int(self.interval), 1)
+        assert policy == "bounded-staleness", policy
+        if self.churn <= 0:
+            return max(int(self.max_staleness), 1)
+        return max(min(int(math.ceil(self.max_dirty_frac / self.churn)),
+                       int(self.max_staleness)), 1)
+
+    def recompute_fraction(self, stats, ticks: int = 1) -> float:
+        """Modeled fraction of rows a commit covering ``ticks`` ticks must
+        recompute: ``ticks × churn`` seed rows, each dirtying the rows that
+        read it through L layers of the *sampled* adjacency (fan-out per
+        hop is bounded by both the average degree and the sample cut —
+        DESIGN.md §9's frontier masks are the measured counterpart)."""
+        seed = min(1.0, self.churn * max(ticks, 1)
+                   + self.edge_churn * max(ticks, 1) / max(stats.n_nodes, 1))
+        if seed <= 0.0:
+            return 0.0
+        fan = 1.0 + min(stats.avg_cs, float(self.sample))
+        return min(1.0, seed * fan ** self.gnn_layers)
+
+
+def candidate_space(stats,
+                    settings: tuple = SETTINGS,
+                    backends: tuple = ("fused",),
+                    cluster_counts: tuple = (4, 8, 16),
+                    xbar_sizes: tuple = (None, 128, 256),
+                    policies: tuple | None = None,
+                    workload: WorkloadProfile | None = None) -> list:
+    """Enumerate the candidate grid for one workload.
+
+    Per-setting structure is respected: centralized pins ``n_clusters=1``;
+    decentralized carries one representative cluster count (the cost model
+    prices it per node regardless — see ``Candidate``); semi sweeps the
+    cluster-head counts (capped at the node count — a head must front at
+    least one node). Refresh policies only differentiate mutating
+    workloads, so a query-only profile collapses them to ``eager``.
+    """
+    if policies is None:
+        policies = (POLICIES if workload is not None and workload.mutating
+                    else ("eager",))
+    counts = sorted({max(1, min(int(k), max(stats.n_nodes, 1)))
+                     for k in cluster_counts})
+    out = []
+    for setting in settings:
+        if setting == "centralized":
+            ks = (1,)
+        elif setting == "decentralized":
+            ks = (counts[len(counts) // 2],)
+        else:
+            ks = tuple(counts)
+        for backend in backends:
+            for k in ks:
+                for size in xbar_sizes:
+                    for policy in policies:
+                        out.append(Candidate(setting, backend, k, size,
+                                             policy))
+    return out

@@ -170,6 +170,11 @@ class IncrementalEngine:
         current features. ``dirty0_local`` patches only mutated rows; None
         rebuilds wholesale."""
         g, plan = self.graph, self.plan
+        # feature-only commits never route through _rebuild_structure, so
+        # the live graph must be re-bound here too — a consumer reading
+        # plan.graph (e.g. a re-planner building a replacement plan from
+        # it) would otherwise see cold-start features forever
+        plan.graph = g
         if plan.part is None:
             plan.feats = g.features[None]                # view, O(1)
             return

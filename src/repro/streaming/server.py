@@ -18,7 +18,7 @@ with the churn, not the graph:
     triggered by how much of the graph actually moved.
 
 ``query`` is batched: ids are validated against the served embedding
-table, deduplicated, and gathered once (inherited by ``GNNServer`` — see
+table and gathered in one fancy index (inherited from ``GNNServer`` — see
 ``launch.gnn``). Between commits, queries serve the policy-bounded stale
 embeddings; ``flush()`` forces a commit.
 """
@@ -52,7 +52,15 @@ class StreamingGNNServer(GNNServer):
         self.updates: list[StreamingUpdate] = []
         self.commits = 0
         self.full_refreshes = 0
+        # commit observers: fn(server, update), called after every commit —
+        # the online re-plan hook (repro.planner.ReplanMonitor) and load
+        # harnesses subscribe here
+        self.observers: list = []
         self._reset_buffers()
+
+    def add_observer(self, fn) -> None:
+        """Subscribe ``fn(server, update)`` to every committed tick."""
+        self.observers.append(fn)
 
     def _reset_buffers(self) -> None:
         n = self.engine.graph.n_nodes
@@ -143,6 +151,8 @@ class StreamingGNNServer(GNNServer):
         self.refreshes += 1
         self._served_version = self.version
         self.updates.append(upd)
+        for fn in self.observers:
+            fn(self, upd)
         return upd
 
     def refresh(self) -> float:

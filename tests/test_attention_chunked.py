@@ -3,6 +3,7 @@ canonical-mask parity, and sliding-window semantics."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hyp import given, settings, st
 
 from repro.models.attention import NEG_INF, chunked_attention
@@ -29,6 +30,7 @@ def _dense_oracle(q, k, v, causal, window):
     return out.reshape(b, sq, h, -1)
 
 
+@pytest.mark.slow          # >10s on the CI CPU (--durations=15)
 @settings(max_examples=15, deadline=None)
 @given(sq=st.integers(3, 33), h=st.sampled_from([2, 4, 6]),
        kv_div=st.sampled_from([1, 2]), dk=st.sampled_from([4, 8]),

@@ -1,0 +1,79 @@
+"""Benchmark artifacts must be reproducible: running a --smoke bench twice
+with the same seed/argv must produce byte-identical METRICS (modulo the
+sanctioned volatile fields — wall-clock under ``timing`` keys, the
+runner's ``seconds``/``git_sha``), per the determinism convention in
+benchmarks/run.py. A drifting artifact would make the CI perf-trajectory
+JSONs (BENCH_<name>.json) undiffable across commits.
+"""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import run as runner  # noqa: E402
+
+
+def _smoke_twice(name: str, extra_argv: tuple = ()) -> tuple:
+    """Run one bench's smoke path twice in-process; returns the two
+    canonical METRICS serializations plus the raw final METRICS."""
+    mod = runner.discover([name])[name]
+    outs = []
+    for _ in range(2):
+        saved = sys.argv
+        try:
+            sys.argv = ([f"benchmarks/{name}.py"]
+                        + list(getattr(mod, "SMOKE_ARGV", []))
+                        + list(extra_argv))
+            rc = int(mod.main() or 0)
+        finally:
+            sys.argv = saved
+        assert rc == 0, f"{name} smoke failed (rc={rc})"
+        outs.append(json.dumps(
+            runner.canonical_metrics(copy.deepcopy(mod.METRICS)),
+            sort_keys=True, default=str))
+    return outs[0], outs[1], mod.METRICS
+
+
+def test_canonical_metrics_strips_volatile_recursively():
+    rec = dict(bench="x", seconds=1.23, git_sha="abc",
+               metrics=dict(rows=[dict(v=1, timing=dict(ms=9.9))], n=2))
+    canon = runner.canonical_metrics(rec)
+    assert canon == dict(bench="x", metrics=dict(n=2, rows=[dict(v=1)]))
+    # key order is canonical: two dict orderings serialize identically
+    a = runner.canonical_metrics(dict(b=1, a=2))
+    b = runner.canonical_metrics(dict(a=2, b=1))
+    assert json.dumps(a) == json.dumps(b)
+
+
+def test_mapper_sweep_smoke_metrics_deterministic(capsys):
+    first, second, _ = _smoke_twice("mapper_sweep")
+    assert first == second
+    capsys.readouterr()
+
+
+def test_planner_sweep_model_metrics_deterministic(capsys):
+    """The planner sweep's decisions, scores, and Pareto frontier are pure
+    functions of the workload — two runs must agree byte for byte
+    (--no-serve keeps the measured serving phase out of this fast test;
+    its timings are under 'timing' keys and stripped anyway)."""
+    first, second, raw = _smoke_twice("planner_sweep", ("--no-serve",))
+    assert first == second
+    assert raw["datasets"] and raw["adaptivity"]["taxi_mixed"] == "semi"
+    capsys.readouterr()
+
+
+@pytest.mark.slow
+def test_load_serve_smoke_metrics_deterministic(capsys):
+    """The load harness measures wall-clock — exactly what the convention
+    quarantines under 'timing'. Everything outside it (served counts,
+    commits, config grid) must reproduce; the quarantine must actually
+    contain the percentiles."""
+    first, second, raw = _smoke_twice("load_serve")
+    assert first == second
+    assert "p50_ms" not in first and "qps" not in first    # quarantined
+    assert any("timing" in r for r in raw["configs"])      # ... but present
+    capsys.readouterr()

@@ -19,6 +19,7 @@ def test_search_matches_oracle(e, q, nodes):
     np.testing.assert_array_equal(np.asarray(c), np.asarray(c_ref))
 
 
+@pytest.mark.slow          # >10s on the CI CPU (--durations=15)
 @settings(max_examples=15, deadline=None)
 @given(e=st.integers(1, 200), q=st.integers(1, 20), nodes=st.integers(1, 50),
        seed=st.integers(0, 2**31 - 1))

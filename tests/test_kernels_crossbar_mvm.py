@@ -76,6 +76,7 @@ def test_quantization_error_shrinks_with_resolution():
     assert errs[2] < 0.05, errs
 
 
+@pytest.mark.slow          # >10s on the CI CPU (--durations=15)
 @settings(max_examples=20, deadline=None)
 @given(m=st.integers(1, 24), k=st.integers(1, 100), n=st.integers(1, 24),
        seed=st.integers(0, 2**31 - 1))

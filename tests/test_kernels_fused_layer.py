@@ -115,11 +115,12 @@ def test_multilayer_driver_matches_gnn_forward():
                                    rtol=1e-5, atol=1e-5)
 
 
-def test_gnn_forward_fused_backend_dispatch():
-    """GNNConfig(backend='fused') routes through the fused kernel and agrees
-    with the jnp composed backend for both numerics."""
+def test_gnn_forward_backend_dispatch(backend, make_graph):
+    """GNNConfig(backend=...) routes each backend of the shared conftest
+    axis through its kernel path and agrees with the jnp composed oracle
+    for both numerics (the grid that used to be a fused-only loop)."""
     import dataclasses
-    g = random_graph(30, 150, 16, seed=6).gcn_normalize()
+    g = make_graph(30, 150, 16, seed=6)
     nbr, wts = g.neighbor_sample(8)
     args = (jnp.asarray(g.features), jnp.asarray(nbr), jnp.asarray(wts))
     for numerics in (CrossbarNumerics(ideal=True), QUANT):
@@ -128,6 +129,6 @@ def test_gnn_forward_fused_backend_dispatch():
         params = gnn.init_params(jax.random.key(1), cfg)
         ref = np.asarray(gnn.forward(params, *args, cfg))
         got = np.asarray(gnn.forward(
-            params, *args, dataclasses.replace(cfg, backend="fused")))
+            params, *args, dataclasses.replace(cfg, backend=backend)))
         scale = np.abs(ref).max() or 1.0
         np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4 * scale)

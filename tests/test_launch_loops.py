@@ -45,6 +45,7 @@ def test_train_fault_recovery(tmp_path):
     assert 5 in seen                      # the failed step was replayed
 
 
+@pytest.mark.slow          # >10s on the CI CPU (--durations=15)
 def test_train_resume_continues(tmp_path):
     cfg = TrainConfig(arch="internlm2-1.8b", smoke=True, steps=4, batch=2,
                       seq=16, ckpt_dir=str(tmp_path), ckpt_every=2,
@@ -58,6 +59,7 @@ def test_train_resume_continues(tmp_path):
     assert seen and seen[0] == 5          # resumed after the step-4 ckpt
 
 
+@pytest.mark.slow          # >10s on the CI CPU (--durations=15)
 def test_serve_greedy_matches_direct_decode():
     srv = Server("internlm2-1.8b", smoke=True, slots=2, capacity=32)
     prompts = [[3, 1, 4], [1, 5, 9]]

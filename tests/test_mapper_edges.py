@@ -1,0 +1,176 @@
+"""Mapper edge cases the planner hits while sweeping (DESIGN.md §8/§10).
+
+The planner enumerates setting × cluster count × crossbar geometry over
+arbitrary graph statistics; every point must either compile to a
+well-formed ``CompiledMapping`` or raise the documented ``ValueError`` —
+never silently mis-schedule (a wrong round count would silently corrupt
+every latency/energy rollup the planner ranks candidates by).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.costmodel import DEFAULT_HW
+from repro.core.graph import Graph, GraphStats, random_graph
+from repro.core.partition import plan_execution
+from repro.mapper import XbarInventory, tile_layer
+from repro.mapper.compile import compile_mapping, items_per_device
+
+SETTINGS = ("centralized", "decentralized", "semi")
+
+
+def _zero_edge_graph(n: int = 9, f: int = 6) -> Graph:
+    rng = np.random.default_rng(0)
+    return Graph(np.zeros(n + 1, np.int64), np.zeros(0, np.int32), None,
+                 rng.normal(size=(n, f)).astype(np.float32))
+
+
+# ---------------------------------------------------- zero-edge graphs
+
+@pytest.mark.parametrize("setting", SETTINGS)
+def test_zero_edge_stats_compile(setting):
+    """n_edges = 0, avg_cs = 0: every core still schedules at least its
+    self-row work — no zero-division, no zero-round schedule."""
+    stats = GraphStats("empty", 32, 0, 8, 0.0)
+    m = compile_mapping((8, 16), stats, setting=setting, n_clusters=4)
+    assert m.cam.rounds >= 1 and m.agg.rounds >= 1 and m.fx.rounds >= 1
+    assert m.t_compute > 0 and m.energy_j > 0
+    assert all(0 < occ <= 1.0 for occ in m.array_utilization)
+
+
+def test_zero_edge_graph_serves_end_to_end():
+    """A concrete edgeless graph flows through partition + forward: every
+    row aggregates only its self loop (weight 1/(0+1) = 1)."""
+    import jax
+    from repro.core import gnn
+    g = _zero_edge_graph().gcn_normalize()
+    np.testing.assert_allclose(g.self_loop, 1.0)
+    cfg = gnn.GNNConfig(in_dim=6, hidden_dims=(8,), out_dim=4, sample=4)
+    params = gnn.init_params(jax.random.key(0), cfg)
+    cent = plan_execution(g, "centralized", sample=4)
+    ref = cent.scatter(np.asarray(cent.make_forward(cfg)(params)))
+    dec = plan_execution(g, "decentralized", sample=4, n_clusters=3)
+    out = dec.scatter(np.asarray(dec.make_forward(cfg)(params)))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    assert dec.part.comm_volume.sum() == 0       # nothing to exchange
+
+
+# ------------------------------------------------- single-node clusters
+
+def test_single_node_clusters_compile_and_run():
+    """k == n (every cluster one node): items_per_device floors at 1 and
+    the concrete runtime still matches the centralized oracle."""
+    import jax
+    from repro.core import gnn
+    assert items_per_device("semi", 8, 8) == 1
+    assert items_per_device("semi", 8, 100) == 1      # k > n floors too
+    stats = GraphStats("tiny", 8, 24, 6, 3.0)
+    m = compile_mapping((6, 16), stats, setting="semi", n_clusters=8)
+    assert m.items_per_device == 1 and m.t_compute > 0
+    g = random_graph(8, 24, 6, seed=3).gcn_normalize()
+    cfg = gnn.GNNConfig(in_dim=6, hidden_dims=(8,), out_dim=4, sample=4)
+    params = gnn.init_params(jax.random.key(0), cfg)
+    cent = plan_execution(g, "centralized", sample=4)
+    ref = cent.scatter(np.asarray(cent.make_forward(cfg)(params)))
+    plan = plan_execution(g, "decentralized", sample=4, n_clusters=8)
+    assert plan.part.n_max == 1
+    out = plan.scatter(np.asarray(plan.make_forward(cfg)(params)))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_plan_execution_clamps_cluster_count_to_nodes():
+    """k > n would build empty devices; the runtime clamps instead (the
+    planner sweeps cluster counts over arbitrarily small graphs)."""
+    g = random_graph(6, 20, 4, seed=0).gcn_normalize()
+    for setting in ("decentralized", "semi"):
+        p = plan_execution(g, setting, sample=4, n_clusters=50)
+        assert p.n_clusters == 6
+        owned = p.part.local_nodes[p.part.local_mask]
+        assert sorted(owned.tolist()) == list(range(6))
+
+
+# ------------------------------------- scarcity: no duplication possible
+
+def test_scarce_inventory_serializes_never_duplicates():
+    """One array per core against a 12-tile weight set: the only legal
+    schedule is full serialization (copies == 1, groups == tiles), and the
+    rollup must price every round."""
+    inv = XbarInventory(cam_arrays=1, agg_arrays=1, fx_arrays=1)
+    stats = GraphStats("wide", 100, 1000, 1433, 10.0)
+    m = compile_mapping((1433, 128), stats, setting="centralized",
+                        inventory=inv)
+    t = m.layers[0].tiling
+    assert t.k_tiles == 12 and t.n_tiles == 1       # 1433/128 rows
+    assert m.fx.copies == 1 and m.fx.groups == 12 and not m.fx.resident
+    assert m.fx.rounds == m.fx.n_items * 12
+    assert 0 < m.fx.occupancy <= 1.0
+    rich = compile_mapping((1433, 128), stats, setting="centralized")
+    assert m.t_compute > rich.t_compute             # scarcity costs rounds
+    assert m.energy_j == pytest.approx(rich.energy_j)   # same work, though
+
+
+# ------------------------- re-geometried arrays: both axes overflow one
+
+def test_with_xbar_size_overflows_both_axes():
+    """A 216x300 layer on 64x64 arrays spans >1 array in rows *and*
+    columns; the tiling, the kernel grid, and the rollup must all agree."""
+    inv = XbarInventory().with_xbar_size(64)
+    stats = GraphStats("g", 500, 5000, 216, 10.0)
+    m = compile_mapping((216, 300, 16), stats, setting="centralized",
+                        inventory=inv)
+    t0 = m.layers[0].tiling
+    assert t0.rows == 64 and t0.cols == 64
+    assert t0.k_tiles == 4 and t0.n_tiles == 5      # both axes > 1 array
+    assert t0.n_arrays == 20
+    assert t0.pad_k == 4 * 64 - 216 and t0.pad_n == 5 * 64 - 300
+    g0 = m.layers[0].grid
+    assert g0.k_pad % 64 == 0 and g0.bk == 64
+    assert m.weight_arrays == sum(lm.tiling.n_arrays for lm in m.layers)
+    # iso-cell re-geometry keeps the silicon budget (±1 array rounding)
+    iso = XbarInventory().with_xbar_size(64, iso_cells=True)
+    assert iso.fx_arrays * 64 * 64 <= XbarInventory().total_cells[2]
+
+
+# ----------------------------------------- documented failure surfaces
+
+def test_documented_value_errors_not_silent_misschedules():
+    stats = GraphStats("g", 100, 1000, 16, 4.0)
+    # one weight cannot span an array: cols < bit_slices
+    with pytest.raises(ValueError, match="cannot hold"):
+        tile_layer(8, 8, rows=8, cols=4, w_bits=8, cell_bits=1)
+    with pytest.raises(ValueError, match="cannot hold"):
+        compile_mapping(
+            (16, 8), stats,
+            inventory=dataclasses.replace(XbarInventory().with_xbar_size(4),
+                                          cell_bits=1))
+    # degenerate layer dims
+    with pytest.raises(ValueError, match="positive layer dims"):
+        compile_mapping((16, 0), stats)
+    # inventory fields must be physical
+    with pytest.raises(ValueError, match=">= 1"):
+        XbarInventory(agg_arrays=0)
+    # unknown setting names the valid ones
+    with pytest.raises(ValueError, match="centralized"):
+        compile_mapping((16, 8), stats, setting="federated")
+
+
+def test_planner_sweep_space_compiles_everywhere():
+    """The exact grid the planner enumerates (settings x cluster counts x
+    crossbar sizes) compiles on hostile stats — zero edges, single node,
+    huge features — or raises ValueError; nothing else escapes."""
+    hostile = (GraphStats("empty", 16, 0, 4, 0.0),
+               GraphStats("one", 1, 0, 4, 0.0),
+               GraphStats("wide", 64, 600, 3703, 2.0))
+    for stats in hostile:
+        for setting in SETTINGS:
+            for k in (1, 4, 64):
+                for size in (None, 64, 512):
+                    inv = XbarInventory.from_hardware(DEFAULT_HW, setting)
+                    if size is not None:
+                        inv = inv.with_xbar_size(size)
+                    m = compile_mapping((max(stats.feature_len, 1), 32),
+                                        stats, inventory=inv,
+                                        setting=setting, n_clusters=k)
+                    assert m.t_compute > 0
+                    assert m.cam.rounds >= 1 and m.fx.rounds >= 1

@@ -61,6 +61,7 @@ def test_shared_expert_added():
                            np.asarray(out1, np.float32))
 
 
+@pytest.mark.slow          # >10s on the CI CPU (--durations=15)
 @settings(max_examples=20, deadline=None)
 @given(s=st.integers(4, 32), e=st.integers(2, 8), k=st.integers(1, 3),
        seed=st.integers(0, 2 ** 16))

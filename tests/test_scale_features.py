@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core.graph import random_graph
@@ -11,6 +12,7 @@ from repro.models import build
 from repro.optim import AdamWConfig, adamw_init
 
 
+@pytest.mark.slow          # >10s on the CI CPU (--durations=15)
 def test_grad_accum_matches_full_batch():
     cfg = get_config("internlm2-1.8b", smoke=True)
     model = build(cfg)

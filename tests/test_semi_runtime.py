@@ -1,7 +1,9 @@
 """Two-tier semi-decentralized runtime: emulated/SPMD parity on every
 backend, exchange-mode equivalence, measured-traffic accounting, and the
 satellite bugfix regressions (dataset_like validation, sample-pruned halo
-tables, platform-aware interpret default)."""
+tables, platform-aware interpret default). Parity axes come from the
+shared conftest grid (``backend`` / ``distributed_setting`` /
+``oracle_case``)."""
 import os
 import subprocess
 import sys
@@ -10,41 +12,39 @@ import numpy as np
 import jax
 import pytest
 
+import conftest
 from repro.core import gnn
 from repro.core.graph import dataset_like, random_graph
 from repro.core.partition import (build_local_subgraphs, partition,
                                   plan_execution)
 
 
-@pytest.fixture(scope="module")
-def setup():
-    g = random_graph(40, 200, 8, seed=0).gcn_normalize()
-    cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(16,), out_dim=4, sample=8)
-    params = gnn.init_params(jax.random.key(0), cfg)
-    cent = plan_execution(g, "centralized", sample=8)
-    ref = cent.scatter(np.asarray(cent.make_forward(cfg)(params)))
-    return g, cfg, params, ref
+def test_conftest_grid_matches_runtime_axes():
+    """The shared fixture grid must track the runtime's real axes — a new
+    backend or setting must widen every parity loop at once."""
+    assert conftest.BACKENDS == gnn.BACKENDS
+    assert set(conftest.SETTINGS) == {"centralized", "decentralized", "semi"}
+    assert set(conftest.DISTRIBUTED_SETTINGS) == \
+        set(conftest.SETTINGS) - {"centralized"}
 
 
-@pytest.mark.parametrize("backend", ("jnp", "pallas", "fused"))
-def test_semi_two_tier_matches_centralized(setup, backend):
+def test_semi_two_tier_matches_centralized(oracle_case, backend):
     """plan_execution(g, "semi") runs the genuine two-tier forward (tier-0
     spoke->head gather, tier-1 head halo) on every kernel backend and still
     equals the centralized full-graph oracle."""
-    g, cfg, params, ref = setup
+    g, cfg, params, ref = oracle_case
     plan = plan_execution(g, "semi", backend=backend, sample=8, n_clusters=3)
     assert plan.hier is not None          # no longer the decentralized path
     out = plan.scatter(np.asarray(plan.make_forward(cfg)(params)))
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("setting", ("decentralized", "semi"))
-def test_emulated_alltoall_equals_allgather(setup, setting):
+def test_emulated_alltoall_equals_allgather(oracle_case, distributed_setting):
     """The emulated exchange must route identically through both strategies
     (the alltoall path exercises the same send/recv tables as the SPMD
     collective — the tables traffic is billed on)."""
-    g, cfg, params, ref = setup
-    plan = plan_execution(g, setting, sample=8, n_clusters=3)
+    g, cfg, params, ref = oracle_case
+    plan = plan_execution(g, distributed_setting, sample=8, n_clusters=3)
     out_ag, out_aa = (np.asarray(plan.make_forward(cfg, mode=m)(params))
                       for m in ("allgather", "alltoall"))
     np.testing.assert_allclose(out_ag, out_aa, rtol=1e-5, atol=1e-6)
@@ -52,8 +52,8 @@ def test_emulated_alltoall_equals_allgather(setup, setting):
                                rtol=1e-4, atol=1e-4)
 
 
-def test_semi_plan_is_two_tier(setup):
-    g, *_ = setup
+def test_semi_plan_is_two_tier(oracle_case):
+    g, *_ = oracle_case
     plan = plan_execution(g, "semi", sample=8, n_clusters=3,
                           spokes_per_head=2)
     h = plan.hier
@@ -101,26 +101,26 @@ def test_semi_spmd_matches_emulated_4dev():
     assert "SEMI_SPMD_OK" in r.stdout, r.stdout + r.stderr
 
 
-def test_measured_traffic_matches_pruned_comm_volume():
+def test_measured_traffic_matches_pruned_comm_volume(distributed_setting):
     """The validation loop's core invariant: alltoall rows counted on the
     executed exchange tables == the pruned comm_volume e_ij, per pair."""
+    setting = distributed_setting
     g = dataset_like("taxi", scale=0.005, seed=1).gcn_normalize()
     cfg = gnn.GNNConfig(in_dim=g.feature_len, hidden_dims=(8,), out_dim=4,
                         sample=4)
-    for setting in ("decentralized", "semi"):
-        plan = plan_execution(g, setting, sample=4, n_clusters=3)
-        rep = plan.measured_traffic(cfg, mode="alltoall")
-        np.testing.assert_array_equal(rep.tier1_rows, plan.part.comm_volume)
-        assert rep.tier1_bytes().shape == (2, 3)   # [layers, devices]
-        if setting == "semi":
-            assert rep.tier0_rows.sum() == g.n_nodes
-            assert (rep.tier0_bytes().sum()
-                    == g.n_nodes * g.feature_len * rep.itemsize)
-        else:
-            assert rep.tier0_rows.size == 0
-        # allgather ships full padded tables — strictly more rows
-        ag = plan.measured_traffic(cfg, mode="allgather")
-        assert ag.tier1_rows.sum() >= rep.tier1_rows.sum()
+    plan = plan_execution(g, setting, sample=4, n_clusters=3)
+    rep = plan.measured_traffic(cfg, mode="alltoall")
+    np.testing.assert_array_equal(rep.tier1_rows, plan.part.comm_volume)
+    assert rep.tier1_bytes().shape == (2, 3)   # [layers, devices]
+    if setting == "semi":
+        assert rep.tier0_rows.sum() == g.n_nodes
+        assert (rep.tier0_bytes().sum()
+                == g.n_nodes * g.feature_len * rep.itemsize)
+    else:
+        assert rep.tier0_rows.size == 0
+    # allgather ships full padded tables — strictly more rows
+    ag = plan.measured_traffic(cfg, mode="allgather")
+    assert ag.tier1_rows.sum() >= rep.tier1_rows.sum()
 
 
 def test_halo_tables_pruned_to_sample():

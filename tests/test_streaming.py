@@ -1,6 +1,7 @@
 """Streaming subsystem: delta rebuild contract, k-hop frontier exactness,
-incremental-vs-full equivalence on every backend x setting, incremental
-traffic invariants, and the StreamingGNNServer refresh policies."""
+incremental-vs-full equivalence on every backend x setting (the shared
+conftest ``setting_backend`` grid), incremental traffic invariants, and
+the StreamingGNNServer refresh policies."""
 import numpy as np
 import jax
 import pytest
@@ -13,12 +14,6 @@ from repro.streaming import (GraphDelta, IncrementalEngine,
                              StreamingGNNServer, apply_deltas,
                              expand_frontier)
 
-SETTINGS = ("centralized", "decentralized", "semi")
-
-
-def _graph(n=40, e=200, f=12, seed=1):
-    return random_graph(n, e, f, seed=seed).gcn_normalize()
-
 
 def _raw_edges(g: Graph):
     dst = np.repeat(np.arange(g.n_nodes), np.diff(g.indptr))
@@ -27,8 +22,8 @@ def _raw_edges(g: Graph):
 
 # ---- delta: amortized rebuild + renormalization contract ----------------
 
-def test_feature_only_delta_keeps_structure():
-    g = _graph()
+def test_feature_only_delta_keeps_structure(make_graph):
+    g = make_graph()
     d = GraphDelta(g.n_nodes)
     rows = np.ones((3, g.feature_len), np.float32)
     d.update_features([5, 1, 9], rows)
@@ -84,11 +79,11 @@ def test_remove_edges_drops_all_parallel_duplicates():
     assert res.graph.n_edges == 1 and res.graph.indices[0] == 1
 
 
-def test_remove_cancels_earlier_buffered_add_but_not_later():
+def test_remove_cancels_earlier_buffered_add_but_not_later(make_graph):
     """Buffered policies replay ops in order: add-then-remove nets out,
     remove-then-add survives (regression: removes used to apply only to
     pre-existing edges, so a removed-after-added edge leaked through)."""
-    g = _graph(20, 60, 4, seed=5)
+    g = make_graph(20, 60, 4, seed=5)
     has = (np.repeat(np.arange(20), np.diff(g.indptr)) * 20
            + g.indices).tolist()
     pair = next((d, s) for d in range(20) for s in range(20)
@@ -101,11 +96,11 @@ def test_remove_cancels_earlier_buffered_add_but_not_later():
     assert apply_deltas(g, d2).graph.n_edges == g.n_edges + 1
 
 
-def test_engine_keeps_shared_plan_consistent():
+def test_engine_keeps_shared_plan_consistent(make_graph):
     """The engine mutates the ExecutionPlan in place; after streaming, the
     plan's own make_forward must reproduce the engine's embeddings (feats
     and structural tables both tracked the live graph)."""
-    g = _graph(30, 140, 8, seed=2)
+    g = make_graph(30, 140, 8, seed=2)
     plan = plan_execution(g, "decentralized", backend="jnp", sample=4,
                           n_clusters=2)
     cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(8,), out_dim=4, sample=4)
@@ -113,10 +108,19 @@ def test_engine_keeps_shared_plan_consistent():
     eng = IncrementalEngine(plan, cfg, params)
     eng.full_refresh()
     rng = np.random.default_rng(3)
+    # feature-only tick first: plan.graph must track the live graph even
+    # when no structural rebuild runs (a re-planner building a replacement
+    # plan from plan.graph would otherwise revert every committed update)
+    d = GraphDelta(g.n_nodes).update_features(
+        [4], rng.normal(size=(1, 8)).astype(np.float32))
+    eng.apply_delta(d)
+    assert plan.graph is eng.graph
+    np.testing.assert_array_equal(plan.graph.features, eng.graph.features)
     d = GraphDelta(g.n_nodes).update_features(
         [2, 8], rng.normal(size=(2, 8)).astype(np.float32))
     d.add_edges([6], [19])
     eng.apply_delta(d)
+    assert plan.graph is eng.graph
     out = plan.scatter(np.asarray(plan.make_forward(cfg)(params)))
     np.testing.assert_allclose(out, eng.embeddings(), atol=1e-5)
 
@@ -153,8 +157,8 @@ def test_frontier_walks_one_hop_per_layer_and_ignores_padding():
     assert 0.0 < fr.recompute_fraction() < 1.0
 
 
-def test_frontier_monotone_and_structure_dirty_everywhere():
-    g = _graph(50, 300, 4, seed=7)
+def test_frontier_monotone_and_structure_dirty_everywhere(make_graph):
+    g = make_graph(50, 300, 4, seed=7)
     nbr, wts = g.neighbor_sample(6)
     rng = np.random.default_rng(0)
     fd = rng.random(50) < 0.1
@@ -168,10 +172,9 @@ def test_frontier_monotone_and_structure_dirty_everywhere():
 
 # ---- incremental == full on every backend x setting ---------------------
 
-@pytest.mark.parametrize("setting", SETTINGS)
-@pytest.mark.parametrize("backend", gnn.BACKENDS)
-def test_incremental_matches_full_recompute(setting, backend):
-    g = _graph(30, 140, 8, seed=2)
+def test_incremental_matches_full_recompute(setting_backend, make_graph):
+    setting, backend = setting_backend
+    g = make_graph(30, 140, 8, seed=2)
     k = None if setting == "centralized" else 2
     plan = plan_execution(g, setting, backend=backend, sample=4,
                           n_clusters=k)
@@ -200,10 +203,10 @@ def test_incremental_matches_full_recompute(setting, backend):
     assert err < 1e-4, (setting, backend, err)
 
 
-def test_bit_accurate_numerics_degrade_to_full_refresh():
+def test_bit_accurate_numerics_degrade_to_full_refresh(make_graph):
     """The global DAC scale couples every row: incremental must fall back
     to a full refresh rather than quantize against a stale max|Z|."""
-    g = _graph(30, 140, 8, seed=2)
+    g = make_graph(30, 140, 8, seed=2)
     plan = plan_execution(g, "centralized", backend="jnp", sample=4)
     cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(8,), out_dim=4, sample=4,
                         numerics=CrossbarNumerics(ideal=False))
@@ -221,10 +224,11 @@ def test_bit_accurate_numerics_degrade_to_full_refresh():
 
 # ---- incremental traffic invariants -------------------------------------
 
-@pytest.mark.parametrize("setting", ("decentralized", "semi"))
-def test_incremental_traffic_bounded_by_full(setting):
+def test_incremental_traffic_bounded_by_full(distributed_setting,
+                                             make_graph):
+    setting = distributed_setting
     from repro.distributed.traffic import measure_execution
-    g = _graph(60, 400, 8, seed=4)
+    g = make_graph(60, 400, 8, seed=4)
     plan = plan_execution(g, setting, backend="jnp", sample=4, n_clusters=3)
     cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(8,), out_dim=4, sample=4)
     params = gnn.init_params(jax.random.key(0), cfg)
@@ -243,8 +247,8 @@ def test_incremental_traffic_bounded_by_full(setting):
         assert upd.traffic.tier0_rows.sum() == 2   # the two mutated rows
 
 
-def test_empty_delta_recomputes_and_ships_nothing():
-    g = _graph(40, 200, 8, seed=6)
+def test_empty_delta_recomputes_and_ships_nothing(make_graph):
+    g = make_graph(40, 200, 8, seed=6)
     plan = plan_execution(g, "decentralized", backend="jnp", sample=4,
                           n_clusters=3)
     cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(8,), out_dim=4, sample=4)
@@ -260,8 +264,8 @@ def test_empty_delta_recomputes_and_ships_nothing():
 
 # ---- StreamingGNNServer policies ---------------------------------------
 
-def _streaming_server(policy="eager", **kw):
-    g = _graph(40, 200, 12, seed=8)
+def _streaming_server(make_graph, policy="eager", **kw):
+    g = make_graph(40, 200, 12, seed=8)
     plan = plan_execution(g, "decentralized", backend="jnp", sample=4,
                           n_clusters=3)
     cfg = gnn.GNNConfig(in_dim=12, hidden_dims=(8,), out_dim=4, sample=4)
@@ -277,16 +281,16 @@ def _tick(srv, g, seed):
                       rows=rng.normal(size=(3, g.feature_len)))
 
 
-def test_eager_policy_commits_every_tick():
-    srv, g = _streaming_server("eager")
+def test_eager_policy_commits_every_tick(make_graph):
+    srv, g = _streaming_server(make_graph, "eager")
     for t in range(3):
         assert _tick(srv, g, t) is not None
     assert srv.commits == 4 and srv.full_refreshes == 1   # 1 = cold start
     assert all(not u.full for u in srv.updates[1:])
 
 
-def test_interval_policy_buffers_between_commits():
-    srv, g = _streaming_server("interval", interval=3)
+def test_interval_policy_buffers_between_commits(make_graph):
+    srv, g = _streaming_server(make_graph, "interval", interval=3)
     assert _tick(srv, g, 0) is None and _tick(srv, g, 1) is None
     upd = _tick(srv, g, 2)
     assert upd is not None and srv.pending_ticks == 0
@@ -294,9 +298,9 @@ def test_interval_policy_buffers_between_commits():
     assert upd.frontier.masks[0].sum() >= 3
 
 
-def test_bounded_staleness_triggers_on_dirty_fraction():
-    srv, g = _streaming_server("bounded-staleness", max_staleness=100,
-                               max_dirty_frac=0.2)
+def test_bounded_staleness_triggers_on_dirty_fraction(make_graph):
+    srv, g = _streaming_server(make_graph, "bounded-staleness",
+                               max_staleness=100, max_dirty_frac=0.2)
     committed = 0
     for t in range(12):
         if _tick(srv, g, t) is not None:
@@ -306,8 +310,8 @@ def test_bounded_staleness_triggers_on_dirty_fraction():
     assert srv.commits < 13             # ... but not every tick
 
 
-def test_flush_and_param_update_force_full_refresh():
-    srv, g = _streaming_server("interval", interval=100)
+def test_flush_and_param_update_force_full_refresh(make_graph):
+    srv, g = _streaming_server(make_graph, "interval", interval=100)
     _tick(srv, g, 0)
     assert srv.flush() is not None and srv.flush() is None
     srv.update_params(gnn.init_params(jax.random.key(9), srv.cfg))
@@ -317,8 +321,8 @@ def test_flush_and_param_update_force_full_refresh():
     assert srv.full_refreshes == 2
 
 
-def test_streaming_query_serves_policy_bounded_staleness():
-    srv, g = _streaming_server("interval", interval=5)
+def test_streaming_query_serves_policy_bounded_staleness(make_graph):
+    srv, g = _streaming_server(make_graph, "interval", interval=5)
     before = srv.query(np.arange(4)).copy()
     _tick(srv, g, 0)
     np.testing.assert_array_equal(srv.query(np.arange(4)), before)  # stale

@@ -1,0 +1,185 @@
+"""Property-based backbone for ``streaming.delta`` (tests/_hyp shim-safe).
+
+The contract under test (DESIGN.md §9): a ``GraphDelta`` buffer holding any
+interleaved sequence of feature updates, edge adds, and edge removes —
+including ordered cancellation (add→remove nets out, remove→add survives)
+— must commit, via ``apply_deltas``, to exactly the graph a from-scratch
+rebuild produces: same CSR structure, same renormalized edge weights and
+1/(d+1) self loops, same features. And not just for the whole buffer: for
+*every prefix* of the sequence, because a refresh policy may commit at any
+tick boundary and the committed state must never depend on where the
+buffer was cut.
+
+The oracle replays the ops on a plain (dst, src) edge list — adds append,
+removes drop every currently-present match — then rebuilds the raw CSR
+and calls ``gcn_normalize`` from scratch. Dirt channels are validated
+against the graphs themselves: ``feature_dirty`` must be exactly the
+touched-node set, and every row whose aggregation inputs (neighbor list,
+edge weights, or self-loop weight) differ from the base graph must be
+``structure_dirty`` (soundness — a clean-marked row with changed inputs
+would serve stale embeddings forever).
+"""
+import numpy as np
+
+from _hyp import given, settings, st
+from repro.core.graph import Graph, random_graph
+from repro.streaming import GraphDelta, apply_deltas
+
+
+def _ops(rng, g, n_ops: int) -> list:
+    """Random interleaved op sequence over ``g``'s node set, biased toward
+    collisions (removes drawn from live edges) and always ending in an
+    explicit add→remove→re-add cancellation chain."""
+    n, f = g.n_nodes, g.feature_len
+    dst0 = np.repeat(np.arange(n), np.diff(g.indptr))
+    live = list(zip(dst0.tolist(), g.indices.tolist()))
+    ops = []
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.4:
+            m = int(rng.integers(1, 4))
+            nodes = rng.choice(n, size=m, replace=False)
+            ops.append(("feat", nodes,
+                        rng.normal(size=(m, f)).astype(np.float32)))
+        elif r < 0.7:
+            m = int(rng.integers(1, 3))
+            d, s = rng.integers(0, n, m), rng.integers(0, n, m)
+            ops.append(("add", d, s))
+            live += list(zip(d.tolist(), s.tolist()))
+        else:
+            if live and rng.random() < 0.8:
+                pair = live[int(rng.integers(0, len(live)))]
+            else:
+                pair = (int(rng.integers(0, n)), int(rng.integers(0, n)))
+            ops.append(("rm", np.array([pair[0]]), np.array([pair[1]])))
+    d, s = int(rng.integers(0, n)), int(rng.integers(0, n))
+    ops += [("add", np.array([d]), np.array([s])),
+            ("rm", np.array([d]), np.array([s])),
+            ("add", np.array([d]), np.array([s]))]
+    return ops
+
+
+def _delta_from(ops, n: int) -> GraphDelta:
+    delta = GraphDelta(n)
+    for kind, a, b in ops:
+        if kind == "feat":
+            delta.update_features(a, b)
+        elif kind == "add":
+            delta.add_edges(a, b)
+        else:
+            delta.remove_edges(a, b)
+    return delta
+
+
+def _oracle_rebuild(g_raw: Graph, ops) -> Graph:
+    """From-scratch replay: plain edge list + feature table, then a fresh
+    CSR build and gcn_normalize — no delta machinery involved."""
+    n = g_raw.n_nodes
+    dst0 = np.repeat(np.arange(n), np.diff(g_raw.indptr))
+    pairs = list(zip(dst0.tolist(), g_raw.indices.tolist()))
+    feats = g_raw.features.copy()
+    for kind, a, b in ops:
+        if kind == "feat":
+            feats[a] = b
+        elif kind == "add":
+            pairs += list(zip(a.tolist(), b.tolist()))
+        else:
+            gone = (int(a[0]), int(b[0]))
+            pairs = [p for p in pairs if p != gone]
+    dst = np.array([p[0] for p in pairs], np.int64)
+    src = np.array([p[1] for p in pairs], np.int64)
+    order = np.argsort(dst, kind="stable")
+    indptr = np.zeros(n + 1, np.int64)
+    np.add.at(indptr, dst + 1, 1)
+    return Graph(np.cumsum(indptr), src[order].astype(np.int32), None,
+                 feats).gcn_normalize()
+
+
+def _changed_rows(base: Graph, new: Graph) -> np.ndarray:
+    """[N] bool: rows whose aggregation inputs differ between two
+    normalized graphs (neighbor ids, edge weights, or self-loop)."""
+    n = base.n_nodes
+    changed = np.zeros(n, bool)
+    for u in range(n):
+        b = slice(int(base.indptr[u]), int(base.indptr[u + 1]))
+        m = slice(int(new.indptr[u]), int(new.indptr[u + 1]))
+        changed[u] = (
+            b.stop - b.start != m.stop - m.start
+            or not np.array_equal(base.indices[b], new.indices[m])
+            or not np.allclose(base.edge_weight[b], new.edge_weight[m],
+                               rtol=1e-6)
+            or not np.isclose(base.self_loop[u], new.self_loop[u],
+                              rtol=1e-6))
+    return changed
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_ops=st.integers(3, 8),
+       n=st.sampled_from([6, 13, 20]))
+def test_property_every_prefix_equals_scratch_rebuild(seed, n_ops, n):
+    rng = np.random.default_rng(seed)
+    g_raw = random_graph(n, 3 * n, 4, seed=seed % 1000, weighted=False)
+    g = g_raw.gcn_normalize()
+    ops = _ops(rng, g, n_ops)
+    for cut in range(len(ops) + 1):
+        prefix = ops[:cut]
+        res = apply_deltas(g, _delta_from(prefix, n))
+        oracle = _oracle_rebuild(g_raw, prefix)
+
+        # 1) graph identity with the from-scratch rebuild
+        np.testing.assert_array_equal(res.graph.indptr, oracle.indptr,
+                                      err_msg=f"prefix {cut}")
+        np.testing.assert_array_equal(res.graph.indices, oracle.indices,
+                                      err_msg=f"prefix {cut}")
+        np.testing.assert_allclose(res.graph.edge_weight,
+                                   oracle.edge_weight, rtol=1e-6,
+                                   err_msg=f"prefix {cut}")
+        np.testing.assert_allclose(res.graph.self_loop, oracle.self_loop,
+                                   rtol=1e-6, err_msg=f"prefix {cut}")
+        np.testing.assert_array_equal(res.graph.features, oracle.features,
+                                      err_msg=f"prefix {cut}")
+
+        # 2) feature dirt is exactly the touched-node set
+        touched = np.zeros(n, bool)
+        for kind, a, _ in prefix:
+            if kind == "feat":
+                touched[a] = True
+        np.testing.assert_array_equal(res.feature_dirty, touched,
+                                      err_msg=f"prefix {cut}")
+
+        # 3) structure dirt is sound: every row whose aggregation inputs
+        # moved vs the base graph is marked (the converse — over-marking —
+        # costs recompute, never correctness)
+        changed = _changed_rows(g, res.graph)
+        missed = changed & ~res.structure_dirty
+        assert not missed.any(), (
+            f"prefix {cut}: rows {np.nonzero(missed)[0]} changed but "
+            f"not structure_dirty")
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_cancelled_buffer_is_clean_structurally(seed):
+    """A buffer whose every structural op cancels (add e → remove e, for e
+    not in the base graph) must commit to the base structure exactly —
+    prefix cuts inside the chain still see the intermediate states."""
+    rng = np.random.default_rng(seed)
+    g_raw = random_graph(12, 30, 3, seed=seed % 997, weighted=False)
+    g = g_raw.gcn_normalize()
+    present = set(zip(
+        np.repeat(np.arange(12), np.diff(g.indptr)).tolist(),
+        g.indices.tolist()))
+    fresh = [(d, s) for d in range(12) for s in range(12)
+             if (d, s) not in present]
+    pairs = [fresh[int(rng.integers(0, len(fresh)))] for _ in range(3)]
+    delta = GraphDelta(12)
+    for d, s in pairs:
+        delta.add_edges([d], [s])
+    for d, s in pairs:
+        delta.remove_edges([d], [s])
+    res = apply_deltas(g, delta)
+    np.testing.assert_array_equal(res.graph.indptr, g.indptr)
+    np.testing.assert_array_equal(res.graph.indices, g.indices)
+    np.testing.assert_allclose(res.graph.edge_weight, g.edge_weight,
+                               rtol=1e-6)
+    np.testing.assert_allclose(res.graph.self_loop, g.self_loop, rtol=1e-6)
