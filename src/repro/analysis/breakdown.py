@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512")
 """Per-instruction HBM/FLOP breakdown of a dry-run cell — the 'profile'
 used by the §Perf hillclimbing loop (we have no wall-clock on CPU; the
 lowered per-device HLO is the ground truth we optimize against).
@@ -9,6 +6,17 @@ Usage:
   PYTHONPATH=src python -m repro.analysis.breakdown --arch yi-34b \
       --shape decode_32k [--multi-pod] [--top 30] [--collectives]
 """
+import os
+
+if __name__ == "__main__":
+    # Only the CLI lowers a cell over a fake 512-device host mesh; the
+    # flag must land before jax's backend initializes. Library importers
+    # (instruction_rows is pure HLO-text analysis) must NOT inherit 512
+    # virtual CPU devices — a process that picks this up at import poisons
+    # every later sharded computation with a 512-way mesh of one core.
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512")
+
 import argparse
 
 from repro.analysis import hlo as H

@@ -41,6 +41,9 @@ class GNNConfig:
     numerics: CrossbarNumerics = CrossbarNumerics(ideal=True)
     backend: str = "jnp"                   # one of BACKENDS
     final_activation: bool = False
+    tuned: object | None = None            # TunedKernels bundle (repro.tuning)
+    #                                        — hashable, so swapping tuned
+    #                                        configs retraces jitted forwards
 
     @property
     def dims(self) -> tuple:
@@ -81,7 +84,8 @@ def forward(params: list, x: jax.Array, neighbors: jax.Array,
         act = i < n_layers - 1 or cfg.final_activation
         if cfg.backend == "fused":
             h = fused_gnn_layer(h, neighbors, weights, layer["w"],
-                                layer["b"], cfg.numerics, relu=act)
+                                layer["b"], cfg.numerics, relu=act,
+                                tuned=cfg.tuned)
             continue
         z = aggregate(h, neighbors, weights, backend=cfg.backend)  # message+agg
         h = _transform(z, layer["w"], cfg) + layer["b"]

@@ -314,11 +314,29 @@ class ExecutionPlan:
     weights: np.ndarray             # [K, n_max, S]
     hier: HierPartition | None = None   # set for setting == "semi"
     mapping: object | None = None   # cached CompiledMapping (repro.mapper)
+    tuned: object | None = None     # cached TunedKernels (repro.tuning)
 
     def gnn_config(self, cfg):
-        """Rebind a GNNConfig to this plan's backend/sample."""
+        """Rebind a GNNConfig to this plan's backend/sample (and its tuned
+        kernel configs, when ``tune_kernels`` has run)."""
+        tuned = self.tuned if self.tuned is not None else cfg.tuned
         return dataclasses.replace(cfg, backend=self.backend,
-                                   sample=self.sample)
+                                   sample=self.sample, tuned=tuned)
+
+    def tune_kernels(self, cfg, cache=None, **tune_kw):
+        """Autotune the Pallas kernel launches this plan's forward makes
+        (repro.tuning, DESIGN.md §11) and cache the winners on
+        ``self.tuned`` so ``make_forward`` picks them up. ``cache`` is a
+        ``repro.tuning.TuneCache`` (or a path to load one from); winners
+        are roofline-pruned, measured on the current platform, and
+        bit-identical to the defaults by construction. Returns the
+        ``TunedKernels`` bundle (empty on non-fused backends)."""
+        from repro.tuning import TuneCache, tune_plan
+        if isinstance(cache, str):
+            cache = TuneCache.load(cache)
+        self.tuned = tune_plan(self, self.gnn_config(cfg), cache=cache,
+                               **tune_kw)
+        return self.tuned
 
     def make_forward(self, cfg, mesh=None, mode: str = "alltoall"):
         """Runnable forward for this plan: ``fn(params) -> [K, n_max, out]``.

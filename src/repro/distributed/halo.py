@@ -122,7 +122,7 @@ def _layer_step(table, nbr, wts, layer, cfg, act: bool):
     Honors cfg.numerics on every backend (same contract as core.gnn)."""
     if cfg.backend == "fused":
         return fused_gnn_layer(table, nbr, wts, layer["w"], layer["b"],
-                               cfg.numerics, relu=act)
+                               cfg.numerics, relu=act, tuned=cfg.tuned)
     z = (csr_aggregate_ref(table, nbr, wts) if cfg.backend == "jnp"
          else aggregate(table, nbr, wts, backend=cfg.backend))
     if cfg.numerics.ideal:

@@ -18,24 +18,37 @@ import jax
 import jax.numpy as jnp
 
 from repro.mapper.tiling import padded_grid
+from repro.tuning import registry as _tuning_registry
+from repro.tuning.space import CrossbarGeometry
 
 from .crossbar_mvm import crossbar_matmul_quantized
 from .ref import CrossbarNumerics, quantize_inputs, quantize_weights
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "bm", "bn", "interpret"))
-def crossbar_matmul(x: jax.Array, w: jax.Array,
-                    cfg: CrossbarNumerics = CrossbarNumerics(),
-                    bm: int = 128, bn: int = 128,
-                    interpret: bool | None = None) -> jax.Array:
-    """y = x @ w through the crossbar numerics, via the Pallas kernel.
+def _resolve_blocks(x, w, cfg, bm, bn, depth, tuned):
+    """(bm, bn, depth) with ``None``s filled from the tuned-config bundle,
+    then the process tuning registry, then the hand-picked defaults.
 
-    x: [M, K] float (clipped to >= 0, as in the post-ReLU cores)
-    w: [K, N] float
-    """
-    if cfg.ideal:
-        return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
-                       preferred_element_type=jnp.float32)
+    Resolution is eager (outside the jitted impl) so a registry update
+    reaches the next call instead of a stale jit trace; callers inside an
+    outer jit should thread ``tuned`` (see repro.tuning)."""
+    if bm is None or bn is None or depth is None:
+        geom = CrossbarGeometry(m=x.shape[0], k=x.shape[1], n=w.shape[1],
+                                rows_per_xbar=cfg.rows_per_xbar,
+                                in_bits=cfg.in_bits)
+        c = ((tuned.lookup(geom.key()) if tuned is not None else None)
+             or _tuning_registry.lookup(geom.key()))
+        bm = bm if bm is not None else (c.bm if c else 128)
+        bn = bn if bn is not None else (c.bn if c else 128)
+        depth = depth if depth is not None else (c.depth if c else 1)
+    return bm, bn, depth
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "bm", "bn", "depth", "interpret"))
+def _crossbar_matmul(x: jax.Array, w: jax.Array, cfg: CrossbarNumerics,
+                     bm: int, bn: int, depth: int,
+                     interpret: bool | None) -> jax.Array:
     m, k = x.shape
     _, n = w.shape
     grid = padded_grid(m, k, n, cfg.rows_per_xbar, bm=bm, bn=bn)
@@ -43,20 +56,44 @@ def crossbar_matmul(x: jax.Array, w: jax.Array,
     wq, ws = quantize_weights(w, cfg)
     xq = jnp.pad(xq, ((0, grid.m_pad - m), (0, grid.k_pad - k)))
     wq = jnp.pad(wq, ((0, grid.k_pad - k), (0, grid.n_pad - n)))
-    out = crossbar_matmul_quantized(xq, wq, cfg, bm=bm, bn=bn,
+    out = crossbar_matmul_quantized(xq, wq, cfg, bm=bm, bn=bn, depth=depth,
                                     interpret=interpret)
     return out[:m, :n] * (xs * ws)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "bm", "bn", "interpret"))
+def crossbar_matmul(x: jax.Array, w: jax.Array,
+                    cfg: CrossbarNumerics = CrossbarNumerics(),
+                    bm: int | None = None, bn: int | None = None,
+                    depth: int | None = None,
+                    interpret: bool | None = None, tuned=None) -> jax.Array:
+    """y = x @ w through the crossbar numerics, via the Pallas kernel.
+
+    x: [M, K] float (clipped to >= 0, as in the post-ReLU cores)
+    w: [K, N] float
+    ``bm``/``bn``/``depth`` left at ``None`` resolve through the tuned
+    bundle / tuning registry (defaults 128/128/1 on a miss); explicit
+    values always win. Numerics are block-size and depth invariant.
+    """
+    if cfg.ideal:
+        return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    bm, bn, depth = _resolve_blocks(x, w, cfg, bm, bn, depth, tuned)
+    return _crossbar_matmul(x, w, cfg, bm, bn, depth, interpret)
+
+
 def crossbar_matmul_signed(x: jax.Array, w: jax.Array,
                            cfg: CrossbarNumerics = CrossbarNumerics(),
-                           bm: int = 128, bn: int = 128,
-                           interpret: bool | None = None) -> jax.Array:
+                           bm: int | None = None, bn: int | None = None,
+                           depth: int | None = None,
+                           interpret: bool | None = None,
+                           tuned=None) -> jax.Array:
     """Signed-activation variant (two DAC passes, digital recombine)."""
     if cfg.ideal:
         return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
                        preferred_element_type=jnp.float32)
-    pos = crossbar_matmul(jnp.maximum(x, 0.0), w, cfg, bm, bn, interpret)
-    neg = crossbar_matmul(jnp.maximum(-x, 0.0), w, cfg, bm, bn, interpret)
+    bm, bn, depth = _resolve_blocks(x, w, cfg, bm, bn, depth, tuned)
+    pos = _crossbar_matmul(jnp.maximum(x, 0.0), w, cfg, bm, bn, depth,
+                           interpret)
+    neg = _crossbar_matmul(jnp.maximum(-x, 0.0), w, cfg, bm, bn, depth,
+                           interpret)
     return pos - neg

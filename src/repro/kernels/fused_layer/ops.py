@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from repro.kernels.crossbar_mvm.ref import (CrossbarNumerics,
                                             quantize_weights)
 from repro.mapper.tiling import padded_grid
+from repro.tuning import registry as _tuning_registry
+from repro.tuning.space import FusedGeometry
 
 from .fused_layer import fused_ideal_layer, fused_quant_layer, fused_zmax
 
@@ -40,19 +42,48 @@ def _pad_rows(a: jax.Array, to: int) -> jax.Array:
     return jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)) if pad else a
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cfg", "relu", "bf", "interpret"))
+def _resolve_bf(x, neighbors, w, cfg, bf, tuned):
+    """Lane block for this launch: explicit ``bf`` wins, else the tuned
+    bundle, else the process tuning registry, else the 128 default.
+    Resolution is eager (outside the jitted impl); callers inside an outer
+    jit thread ``tuned`` so the decision is part of the jit key."""
+    if bf is not None:
+        return bf
+    geom = FusedGeometry(nd=neighbors.shape[0], n=x.shape[0],
+                         f_in=x.shape[1], f_out=w.shape[1],
+                         sample=neighbors.shape[1], ideal=cfg.ideal,
+                         rows_per_xbar=cfg.rows_per_xbar)
+    c = ((tuned.lookup(geom.key()) if tuned is not None else None)
+         or _tuning_registry.lookup(geom.key()))
+    return c.bf if c else 128
+
+
 def fused_gnn_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
                     w: jax.Array, b: jax.Array,
                     cfg: CrossbarNumerics = CrossbarNumerics(ideal=True),
-                    *, relu: bool = False, bf: int = 128,
-                    interpret: bool | None = None) -> jax.Array:
+                    *, relu: bool = False, bf: int | None = None,
+                    tuned=None, interpret: bool | None = None) -> jax.Array:
     """act((A_hat @ X) @ W + b) with Z resident in VMEM throughout.
 
     x: [N, F]; neighbors: [Nd, S] int32; weights: [Nd, S]; w: [F, H]; b: [H].
     Matches ``ref.fused_layer_ref`` (the composed csr_aggregate +
-    crossbar_mvm path) for both ideal and bit-accurate ``cfg``.
+    crossbar_mvm path) for both ideal and bit-accurate ``cfg``. ``bf``
+    left at ``None`` resolves through the tuned bundle / registry
+    (``repro.tuning``); padding is zeros either way, so outputs are
+    bit-identical across bf choices.
     """
+    bf = _resolve_bf(x, neighbors, w, cfg, bf, tuned)
+    return _fused_gnn_layer(x, neighbors, weights, w, b, cfg, relu=relu,
+                            bf=bf, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "relu", "bf", "interpret"))
+def _fused_gnn_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
+                     w: jax.Array, b: jax.Array,
+                     cfg: CrossbarNumerics,
+                     *, relu: bool, bf: int,
+                     interpret: bool | None) -> jax.Array:
     n, f = x.shape
     f2, h = w.shape
     assert f == f2, (x.shape, w.shape)

@@ -175,6 +175,13 @@ def main() -> None:
     ap.add_argument("--mapping", action="store_true",
                     help="print the compiled crossbar mapping report "
                          "(DESIGN.md §8)")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune the plan's Pallas kernel launches "
+                         "before serving (repro.tuning, DESIGN.md §11); "
+                         "winners cache to --tune-cache")
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="tuned-config cache file (default: "
+                         "results/tuned_configs.json)")
     ap.add_argument("--stream", type=int, default=0, metavar="TICKS",
                     help="serve a TICKS-long synthetic feature stream "
                          "through StreamingGNNServer (incremental refresh)")
@@ -214,6 +221,12 @@ def main() -> None:
             else None)
     cfg = gnn.GNNConfig(in_dim=g.feature_len, hidden_dims=(args.hidden,),
                         out_dim=16, sample=args.sample)
+    if args.tune:
+        from repro.tuning import DEFAULT_CACHE_PATH, TuneCache
+        cache = TuneCache.load(args.tune_cache or DEFAULT_CACHE_PATH)
+        tuned = plan.tune_kernels(cfg, cache=cache)
+        print(f"autotuned {len(tuned)} kernel geometries "
+              f"(cache: {cache.path}, {len(cache)} entries)")
     if args.stream:
         return stream_main(args, g, plan, cfg)
     srv = GNNServer(plan, cfg, mesh=mesh, mode=args.mode)

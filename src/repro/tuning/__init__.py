@@ -1,0 +1,31 @@
+"""Roofline-guided Pallas kernel autotuner (DESIGN.md §11).
+
+Block-size / pipeline-depth tuning for the ``fused_layer`` and
+``crossbar_mvm`` kernels: enumerate legal candidates per launch geometry
+(``space``), prune them with the ``analysis/roofline.py`` bounds before
+anything is timed (``prune``), measure the survivors (``measure``), and
+cache the winner keyed by (geometry, platform) (``cache``) the way the
+mapper caches mappings. ``ExecutionPlan.tune_kernels`` threads the
+winners into serving via the hashable ``TunedKernels`` bundle on
+``GNNConfig.tuned`` (jit-safe); the process-level ``registry`` is the
+eager fallback the kernel ops wrappers consult when their block params
+are left at ``None``.
+
+Tuned configs never change numerics: depth keeps the ADC per physical
+crossbar and the accumulation order unchanged; bf/bm/bn only move zero
+padding — tuned vs default outputs are bit-identical (regression-tested
+across all three backends).
+"""
+from . import registry  # noqa: F401
+from .autotune import current_platform, plan_geometries, tune, tune_plan
+from .cache import DEFAULT_CACHE_PATH, TuneCache
+from .prune import LaunchCost, launch_cost, prune, roofline_bound
+from .space import (CrossbarConfig, CrossbarGeometry, FusedConfig,
+                    FusedGeometry, TunedKernels, candidates, default_config)
+
+__all__ = [
+    "registry", "current_platform", "plan_geometries", "tune", "tune_plan",
+    "DEFAULT_CACHE_PATH", "TuneCache", "LaunchCost", "launch_cost", "prune",
+    "roofline_bound", "CrossbarConfig", "CrossbarGeometry", "FusedConfig",
+    "FusedGeometry", "TunedKernels", "candidates", "default_config",
+]

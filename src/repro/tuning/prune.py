@@ -1,0 +1,123 @@
+"""Roofline-guided candidate pruning (DESIGN.md §11).
+
+Each candidate config implies an analytic per-launch cost — FLOPs, HBM
+bytes (block re-fetch traffic is a function of the block sizes), and the
+VMEM working set one grid step needs. The costs feed
+``analysis.roofline.roofline_terms`` and the dominant-term bound prunes
+the space *before* anything is timed:
+
+  1. **feasibility** — a candidate whose double-buffered working set
+     exceeds ``HW.vmem_bytes`` can never be scheduled; drop it.
+  2. **bound**       — a candidate whose roofline lower bound is more than
+     ``slack``x the best candidate's bound cannot win by more than
+     measurement noise; drop it.
+  3. **cap**         — measure at most ``max_survivors`` configs (bound
+     order), the default always among them.
+
+The analytic model is the TPU dataflow of the two kernels, not the
+interpreter's: on CPU CI the measurement step re-ranks survivors by what
+actually dominates there (grid-step overhead), which is exactly why the
+pruning is a *bound* filter and not the decision.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.analysis.roofline import HW, V5E, roofline_terms
+
+from .space import CrossbarGeometry, FusedGeometry, candidates
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchCost:
+    """Analytic per-launch cost of one (geometry, config) point — duck-
+    typed to ``analysis.hlo.ModuleCost`` for ``roofline_terms``."""
+    flops: float
+    hbm_bytes: float
+    vmem_bytes: float
+    grid_steps: int
+    collective_bytes: float = 0.0
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+def crossbar_cost(geom: CrossbarGeometry, c) -> LaunchCost:
+    """Cost of one ``crossbar_matmul_quantized`` launch at (bm, bn, depth).
+
+    Grid is (M/bm, N/bn, K/bk) with bk = depth * rows_per_xbar and K
+    innermost, so the out block stays VMEM-resident across the K sweep
+    (charged once) while xq/wq blocks re-fetch per step.
+    """
+    m = _ceil_to(geom.m, c.bm)
+    n = _ceil_to(geom.n, c.bn)
+    k = _ceil_to(geom.k, geom.rows_per_xbar)
+    bk = c.depth * geom.rows_per_xbar
+    steps = (m // c.bm) * (n // c.bn) * max(k // bk, 1)
+    # bit-serial MXU work: one bm x bk x bn matmul per DAC bit-plane
+    flops = 2.0 * m * k * n * geom.in_bits
+    hbm = 4.0 * (steps * (c.bm * bk + bk * c.bn) + m * n)
+    vmem = 4.0 * (c.bm * bk + bk * c.bn + c.bm * c.bn) * 2   # double-buffered
+    return LaunchCost(flops, hbm, vmem, steps)
+
+
+def fused_cost(geom: FusedGeometry, c) -> LaunchCost:
+    """Cost of one ``fused_gnn_layer`` launch at lane block bf.
+
+    The grid is (nd, sample): every step gathers one padded feature row;
+    W/bias blocks are grid-invariant (fetched once); the final step of
+    each node row runs the K_pad x N_pad matmul on the VMEM-resident z.
+    """
+    k_pad = _ceil_to(geom.f_in, c.bf if geom.ideal else geom.rows_per_xbar)
+    n_pad = _ceil_to(geom.f_out, c.bf)
+    steps = geom.nd * max(geom.sample, 1)
+    flops = 2.0 * geom.nd * k_pad * n_pad + 2.0 * steps * k_pad
+    if not geom.ideal:
+        # bit-accurate path: 2 DAC sign passes x the stack-wide 8 bit-serial
+        # planes replay the matmul (plus the zmax scale pass's extra gather)
+        flops *= 16
+        hbm_extra = 4.0 * steps * k_pad          # second gather (zmax pass)
+    else:
+        hbm_extra = 0.0
+    hbm = 4.0 * (steps * k_pad + k_pad * n_pad + geom.nd * n_pad) + hbm_extra
+    vmem = 4.0 * (k_pad * n_pad        # W resident
+                  + 2 * k_pad          # z scratch + gathered x row
+                  + n_pad) * 2
+    return LaunchCost(flops, hbm, vmem, steps)
+
+
+def launch_cost(geom, config) -> LaunchCost:
+    if geom.kernel == "fused_layer":
+        return fused_cost(geom, config)
+    return crossbar_cost(geom, config)
+
+
+def roofline_bound(geom, config, hw: HW = V5E) -> float:
+    """Dominant-term lower bound [s] for one launch (the pruning score)."""
+    return roofline_terms(launch_cost(geom, config), hw).bound_s
+
+
+def prune(geom, cands: list | None = None, hw: HW = V5E,
+          slack: float = 2.0, max_survivors: int = 4) -> list:
+    """[(config, bound_s)] survivors worth timing, best bound first.
+
+    Fully deterministic (pure arithmetic on the geometry), so the
+    survivor set — unlike the measured winner — is part of a bench's
+    deterministic METRICS. The default config always survives, even when
+    its bound loses: it is the reference the winner is gated against.
+    """
+    cands = candidates(geom) if cands is None else list(cands)
+    default = cands[0]
+    scored = [(c, roofline_bound(geom, c, hw)) for c in cands
+              if launch_cost(geom, c).vmem_bytes <= hw.vmem_bytes]
+    if not scored:                      # default over VMEM: measure it alone
+        return [(default, roofline_bound(geom, default, hw))]
+    best = min(b for _, b in scored)
+    scored.sort(key=lambda cb: (cb[1], cb[0]))
+    survivors = [(c, b) for c, b in scored if b <= slack * best]
+    survivors = survivors[:max_survivors]
+    if all(c != default for c, _ in survivors):
+        survivors.append((default, roofline_bound(geom, default, hw)))
+    return survivors

@@ -1,0 +1,45 @@
+"""Process-level table of active tuned kernel configs.
+
+The registry is the *eager* resolution path: kernel ops wrappers whose
+block params default to ``None`` consult it (outside their jitted impls)
+and fall back to the hand-picked defaults on a miss. The *jit-safe* path
+is ``TunedKernels`` on ``GNNConfig.tuned`` — prefer it for anything that
+runs inside an outer ``jax.jit`` (serving forwards), because a registry
+mutation cannot invalidate an already-cached trace that resolved against
+the old table.
+
+Keys are geometry keys (``space.*Geometry.key()``, kernel name included);
+platform scoping happens at activation time — ``activate(cache)`` only
+loads cache entries recorded for the current platform.
+"""
+from __future__ import annotations
+
+_ACTIVE: dict = {}
+
+
+def register(key: tuple, config) -> None:
+    _ACTIVE[tuple(key)] = config
+
+
+def lookup(key: tuple):
+    return _ACTIVE.get(tuple(key))
+
+
+def clear() -> None:
+    _ACTIVE.clear()
+
+
+def active() -> dict:
+    return dict(_ACTIVE)
+
+
+def activate(cache, platform: str | None = None) -> int:
+    """Bulk-register a ``TuneCache``'s entries for one platform (default:
+    the current one). Returns the number of configs activated."""
+    from .autotune import current_platform
+    platform = platform or current_platform()
+    n = 0
+    for key, config in cache.configs_for(platform):
+        register(key, config)
+        n += 1
+    return n

@@ -1,0 +1,168 @@
+"""Tuning search space: kernel geometries, tunable configs, and the
+hashable ``TunedKernels`` bundle that threads winners through jit.
+
+A *geometry* is the static shape signature of one kernel launch — the
+things that decide which block-size/pipeline-depth choices are legal and
+how much data each candidate moves. A *config* is one point in the
+tunable space:
+
+  * ``crossbar_mvm`` — ``(bm, bn, depth)``: the MXU output block and the
+    pipeline depth (how many physical ``rows_per_xbar`` crossbars one grid
+    step owns; the ADC stays per-crossbar inside the step, so numerics are
+    bit-identical at any depth — see kernels/crossbar_mvm).
+  * ``fused_layer`` — ``(bf,)``: the lane-alignment block the ops layer
+    pads F/H to (zero padding; bit-identical at any bf).
+
+Candidate enumeration is deterministic and divisibility-aware; the
+roofline pruning and measurement live in ``prune.py`` / ``autotune.py``.
+
+``TunedKernels`` is a frozen, hashable bundle of (geometry key -> config)
+pairs. It rides on ``GNNConfig.tuned`` — a *static* jit argument — so a
+changed tuning decision retraces every downstream jitted forward instead
+of silently reusing a stale trace (the failure mode a mutable global
+lookup inside a jitted function would have).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# hand-picked defaults the kernels shipped with — always candidate #0, so
+# the measured winner can never be worse than the default under the same
+# measurement protocol (the fused_vs_composed gate relies on this)
+DEFAULT_BF = 128
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_DEPTH = 1
+
+BF_CANDIDATES = (128, 256, 512)
+BM_CANDIDATES = (8, 16, 32, 64, 128, 256)
+BN_CANDIDATES = (128, 256, 512)
+DEPTH_CANDIDATES = (1, 2, 4)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class CrossbarConfig:
+    """One tunable point for the ``crossbar_mvm`` kernel."""
+    bm: int = DEFAULT_BM
+    bn: int = DEFAULT_BN
+    depth: int = DEFAULT_DEPTH    # physical K-crossbars per grid step
+
+    def as_dict(self) -> dict:
+        return {"bm": self.bm, "bn": self.bn, "depth": self.depth}
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class FusedConfig:
+    """One tunable point for the ``fused_layer`` kernel family."""
+    bf: int = DEFAULT_BF          # lane-alignment block for F/H padding
+
+    def as_dict(self) -> dict:
+        return {"bf": self.bf}
+
+
+CONFIG_TYPES = {"crossbar_mvm": CrossbarConfig, "fused_layer": FusedConfig}
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarGeometry:
+    """Static signature of one ``crossbar_matmul_quantized`` launch."""
+    m: int
+    k: int
+    n: int
+    rows_per_xbar: int = 512
+    in_bits: int = 8
+
+    kernel = "crossbar_mvm"
+
+    @property
+    def n_k(self) -> int:
+        """Physical crossbars along the (padded) contraction dim."""
+        return math.ceil(self.k / self.rows_per_xbar)
+
+    def key(self) -> tuple:
+        return (self.kernel, self.m, self.k, self.n,
+                self.rows_per_xbar, self.in_bits)
+
+    def as_dict(self) -> dict:
+        return {"kernel": self.kernel, "m": self.m, "k": self.k,
+                "n": self.n, "rows_per_xbar": self.rows_per_xbar,
+                "in_bits": self.in_bits}
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedGeometry:
+    """Static signature of one ``fused_gnn_layer`` launch.
+
+    ``n`` is the feature-table row count the gather reads (owned + halo
+    rows on distributed settings); ``nd`` the destination rows the grid
+    iterates."""
+    nd: int
+    n: int
+    f_in: int
+    f_out: int
+    sample: int
+    ideal: bool = True
+    rows_per_xbar: int = 512
+
+    kernel = "fused_layer"
+
+    def key(self) -> tuple:
+        return (self.kernel, self.nd, self.n, self.f_in, self.f_out,
+                self.sample, self.ideal, self.rows_per_xbar)
+
+    def as_dict(self) -> dict:
+        return {"kernel": self.kernel, "nd": self.nd, "n": self.n,
+                "f_in": self.f_in, "f_out": self.f_out,
+                "sample": self.sample, "ideal": self.ideal,
+                "rows_per_xbar": self.rows_per_xbar}
+
+
+def default_config(geom):
+    return CONFIG_TYPES[geom.kernel]()
+
+
+def candidates(geom) -> list:
+    """Deterministic, divisibility-legal candidate list (default first).
+
+    crossbar_mvm: any (bm, bn) is legal (the ops layer pads M/N to the
+    block multiples), but ``depth`` must divide the physical crossbar
+    count ``n_k`` — the wrapper only pads K to ``rows_per_xbar``.
+    fused_layer: any bf is legal (zero padding of F/H).
+    """
+    if geom.kernel == "fused_layer":
+        cands = [FusedConfig(bf) for bf in BF_CANDIDATES]
+    else:
+        cands = [CrossbarConfig(bm, bn, d)
+                 for bm in BM_CANDIDATES
+                 for bn in BN_CANDIDATES
+                 for d in DEPTH_CANDIDATES
+                 if geom.n_k % d == 0]
+    default = default_config(geom)
+    return [default] + sorted(c for c in cands if c != default)
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedKernels:
+    """Immutable (geometry key -> config) bundle, hashable so it can ride
+    on a static jit argument (``GNNConfig.tuned``)."""
+    entries: tuple = ()           # sorted ((key, config), ...) pairs
+
+    @classmethod
+    def of(cls, mapping: dict) -> "TunedKernels":
+        return cls(tuple(sorted(mapping.items())))
+
+    def lookup(self, key: tuple):
+        for k, c in self.entries:
+            if k == key:
+                return c
+        return None
+
+    def merged(self, other: "TunedKernels") -> "TunedKernels":
+        """Right-biased union (``other`` wins on key collisions)."""
+        m = dict(self.entries)
+        m.update(other.entries)
+        return TunedKernels.of(m)
+
+    def __len__(self) -> int:
+        return len(self.entries)

@@ -66,6 +66,149 @@ def test_planner_sweep_model_metrics_deterministic(capsys):
     capsys.readouterr()
 
 
+# ---- the --compare perf-trajectory gate ----------------------------------
+
+def _rec(metrics, argv=("--smoke",), seconds=1.0, sha="aaa"):
+    return dict(bench="b", argv=list(argv), smoke=True, returncode=0,
+                seconds=seconds, git_sha=sha, metrics=metrics)
+
+
+def test_compare_identical_records_pass():
+    m = dict(n=3, timing=dict(ms=12.5), rows=[dict(v=1.0)])
+    assert runner.compare_records("b", _rec(m), _rec(m)) == []
+
+
+def test_compare_never_trips_on_volatile_fields():
+    """seconds / git_sha / small timing jitter are sanctioned volatility —
+    the gate must stay quiet on all of them."""
+    base = _rec(dict(n=3, timing=dict(ms=100.0)), seconds=1.0, sha="aaa")
+    cur = _rec(dict(n=3, timing=dict(ms=100.0 * 1.49)),   # under 50%
+               seconds=999.0, sha="bbb")
+    assert runner.compare_records("b", base, cur, threshold=0.5) == []
+    # timing improvements never fail, however large
+    faster = _rec(dict(n=3, timing=dict(ms=0.1)))
+    assert runner.compare_records("b", base, faster, threshold=0.5) == []
+    # a timing leaf with no baseline counterpart is ignored, not an error
+    grew = _rec(dict(n=3, timing=dict(ms=100.0, new_ms=9.9)))
+    assert runner.compare_records("b", base, grew, threshold=0.5) == []
+
+
+def test_compare_fails_on_injected_regression_naming_bench_and_key():
+    """Perturb a timing leaf just past the threshold: the gate must fail
+    and the message must name the bench and the exact metric path."""
+    thr = 0.5
+    base = _rec(dict(cases=[dict(s="semi",
+                                 timing=dict(t_inc_ms=200.0))]))
+    eps = 0.01
+    cur = _rec(dict(cases=[dict(s="semi",
+                                timing=dict(t_inc_ms=200.0 * (1 + thr + eps)))]))
+    msgs = runner.compare_records("streaming_replay", base, cur,
+                                  threshold=thr)
+    assert len(msgs) == 1
+    assert "streaming_replay" in msgs[0]
+    assert "cases[0].timing.t_inc_ms" in msgs[0]
+    # ... and just under the threshold passes
+    ok = _rec(dict(cases=[dict(s="semi",
+                               timing=dict(t_inc_ms=200.0 * (1 + thr - eps)))]))
+    assert runner.compare_records("streaming_replay", base, ok,
+                                  threshold=thr) == []
+
+
+def test_compare_is_direction_aware_for_throughput_leaves():
+    """qps/rate/throughput leaves are higher-is-better: a rise (however
+    large) never fails, a drop past the threshold does — the mirror image
+    of latency-style leaves. Non-numeric timing leaves (e.g. a winner
+    config recorded as a string) are never compared."""
+    base = _rec(dict(timing=dict(closed_qps=100.0, p99_ms=10.0)))
+    surge = _rec(dict(timing=dict(closed_qps=500.0, p99_ms=10.0)))
+    assert runner.compare_records("b", base, surge, threshold=0.5) == []
+    drop = _rec(dict(timing=dict(closed_qps=100.0 / 1.51, p99_ms=10.0)))
+    msgs = runner.compare_records("b", base, drop, threshold=0.5)
+    assert len(msgs) == 1 and "timing.closed_qps" in msgs[0]
+    small_drop = _rec(dict(timing=dict(closed_qps=100.0 / 1.49, p99_ms=10.0)))
+    assert runner.compare_records("b", base, small_drop, threshold=0.5) == []
+    # strings under timing (machine-dependent but not a measurement)
+    cfg_base = _rec(dict(timing=dict(tuned="bf=128", ms=1.0)))
+    cfg_cur = _rec(dict(timing=dict(tuned="bf=256", ms=1.0)))
+    assert runner.compare_records("b", cfg_base, cfg_cur, threshold=0.5) == []
+
+
+def test_compare_fails_on_deterministic_drift_and_argv_change():
+    base = _rec(dict(n=3, frac=0.25))
+    drift = _rec(dict(n=3, frac=0.26))
+    msgs = runner.compare_records("b", base, drift)
+    assert msgs and "frac" in msgs[0] and "drift" in msgs[0]
+    # floats within serialization tolerance are NOT drift
+    close = _rec(dict(n=3, frac=0.25 * (1 + 1e-9)))
+    assert runner.compare_records("b", base, close) == []
+    # argv mismatch short-circuits with the re-record suggestion
+    moved = _rec(dict(n=3, frac=0.25), argv=("--smoke", "--iters", "2"))
+    msgs = runner.compare_records("b", base, moved)
+    assert len(msgs) == 1 and "--update-baseline" in msgs[0]
+
+
+def test_collect_timings_flattens_only_timing_subtrees():
+    m = dict(a=1.0, timing=dict(ms=2.0, nested=dict(s=3.0)),
+             rows=[dict(v=4.0, timing=dict(ms=5.0))])
+    got = runner.collect_timings(m)
+    assert got == {"timing.ms": 2.0, "timing.nested.s": 3.0,
+                   "rows[0].timing.ms": 5.0}
+    assert "a" not in got and all("v" not in k for k in got)
+
+
+def test_compare_gate_end_to_end(tmp_path, capsys, monkeypatch):
+    """The full CLI loop — argv recording, artifact write, baseline load,
+    exit codes — on a stub bench injected through discover(). A stub
+    rather than a real bench: each in-process bench run piles another set
+    of XLA executables/thread pools onto the suite's single process (the
+    real-bench pass is the CI `--smoke --compare` job). Missing baseline
+    fails pointing at --update-baseline; --update-baseline records it; an
+    identical re-run passes --compare; an injected regression (baseline
+    timings scaled down past the threshold) fails naming the bench."""
+    import time
+    import types
+    stub = types.ModuleType("benchmarks.stub_bench")
+    stub.SMOKE_ARGV = ["--iters", "1"]
+    stub.METRICS = {}
+
+    def stub_main():
+        t0 = time.perf_counter()
+        x = float(sum(i * i for i in range(1000)))   # deterministic work
+        stub.METRICS.clear()
+        stub.METRICS.update(
+            dict(cases=[dict(s="semi", v=x)],
+                 timing=dict(t_ms=(time.perf_counter() - t0) * 1e3)))
+        return 0
+
+    stub.main = stub_main
+    monkeypatch.setattr(runner, "discover",
+                        lambda names=None: {"stub_bench": stub})
+
+    argv = ["stub_bench", "--smoke", "--baseline-dir", str(tmp_path)]
+    with pytest.raises(SystemExit, match="baseline comparisons failed"):
+        runner.main(argv + ["--compare"])
+    assert "--update-baseline" in capsys.readouterr().out
+
+    runner.main(argv + ["--update-baseline"])
+    capsys.readouterr()
+    base_path = tmp_path / "BENCH_stub_bench.json"
+    assert base_path.exists()
+    assert json.loads(base_path.read_text())["argv"] == ["--iters", "1"]
+
+    # identical re-run: deterministic metrics reproduce; a loose threshold
+    # absorbs scheduler noise on the genuinely-measured timing
+    runner.main(argv + ["--compare", "--compare-threshold", "50"])
+    assert "baselines match" in capsys.readouterr().out
+
+    baseline = json.loads(base_path.read_text())
+    baseline["metrics"]["timing"]["t_ms"] /= 1e6   # current looks 10^6x slower
+    base_path.write_text(json.dumps(baseline))
+    with pytest.raises(SystemExit, match="baseline comparisons failed"):
+        runner.main(argv + ["--compare", "--compare-threshold", "50"])
+    out = capsys.readouterr().out
+    assert "timing regression" in out and "stub_bench" in out
+
+
 @pytest.mark.slow
 def test_load_serve_smoke_metrics_deterministic(capsys):
     """The load harness measures wall-clock — exactly what the convention
