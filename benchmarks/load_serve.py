@@ -16,7 +16,11 @@ Churn ticks are interleaved every ``--tick-every`` requests; a commit
 blocks the serving thread (the incremental refresh runs on the device that
 answers queries), so refresh cost shows up in the tail percentiles.
 ``--auto`` additionally runs the planner's recommended config with a
-``ReplanMonitor`` attached and reports any online re-plans.
+``ReplanMonitor`` attached and reports any online re-plans. Every row
+also reports the data plane's padding-waste ratio and modeled peak
+live-buffer bytes (``ExecutionPlan.layout_stats``); ``--buckets auto``
+swaps the uniform dense padding for the capacity-bucketed ragged layout
+(DESIGN.md §12) so the two layouts can be compared under load.
 
 Usage:
   PYTHONPATH=src python benchmarks/load_serve.py            # full sweep
@@ -125,18 +129,22 @@ def run_config(g, cfg, setting: str, backend: str, policy: str = "eager",
                n_clusters: int = 4, requests: int = 64, batch: int = 16,
                rate: float | None = None, churn: float = 0.02,
                edge_churn: int = 0, tick_every: int = 4, seed: int = 0,
-               monitor_factory=None) -> dict:
+               buckets=None, monitor_factory=None) -> dict:
     """Measure one configuration under both loops; returns the result row.
 
-    ``monitor_factory`` (optional): called with the built server, returns
-    an attached observer (e.g. a ``repro.planner.ReplanMonitor``) whose
-    re-plan events are reported in the row."""
+    ``buckets`` selects the data-plane layout (DESIGN.md §12): ``None`` /
+    ``"off"`` keeps the uniform dense padding, ``"auto"`` / N the
+    capacity-bucketed ragged layout. ``monitor_factory`` (optional):
+    called with the built server, returns an attached observer (e.g. a
+    ``repro.planner.ReplanMonitor``) whose re-plan events are reported in
+    the row."""
     import dataclasses
     from repro.core.partition import plan_execution
     plan = plan_execution(g, setting, backend=backend,
                           sample=cfg.sample,
                           n_clusters=None if setting == "centralized"
-                          else n_clusters, seed=seed)
+                          else n_clusters, seed=seed, buckets=buckets)
+    layout = plan.layout_stats(cfg)
     srv = StreamingGNNServer(plan, dataclasses.replace(cfg, backend=backend),
                              seed=seed, policy=policy)
     monitor = monitor_factory(srv) if monitor_factory is not None else None
@@ -153,6 +161,9 @@ def run_config(g, cfg, setting: str, backend: str, policy: str = "eager",
                        monitor=monitor)
     row = dict(setting=setting, backend=backend, policy=policy,
                n_clusters=plan.n_clusters,
+               layout=layout["layout"],
+               padding_ratio=round(float(layout["padding_ratio"]), 4),
+               peak_device_bytes=int(layout["peak_device_bytes"]),
                requests=requests, batch=batch,
                served=closed["served"] + opened["served"],
                ticks=closed["ticks"] + opened["ticks"],
@@ -169,6 +180,8 @@ def run_config(g, cfg, setting: str, backend: str, policy: str = "eager",
 def _print_row(r: dict) -> None:
     t = r["timing"]
     print(f"{r['setting']:14s} {r['backend']:7s} {r['policy']:18s} "
+          f"{r['layout']:8s} {r['padding_ratio']:5.2f} "
+          f"{r['peak_device_bytes'] / 1e6:7.2f} "
           f"{r['served']:6d} {r['commits']:4d} "
           f"{t['closed_qps']:9.0f} {t['closed']['p50_ms']:8.2f} "
           f"{t['closed']['p99_ms']:8.2f} {t['open']['p50_ms']:8.2f} "
@@ -196,6 +209,10 @@ def main() -> int:
                     help="backends to sweep (default: fused; full: +jnp)")
     ap.add_argument("--sample", type=int, default=8)
     ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--buckets", default="off", metavar="auto|off|N",
+                    help="partition data-plane layout: 'off' = uniform "
+                         "dense padding, 'auto'/N = capacity-bucketed "
+                         "ragged layout (DESIGN.md §12)")
     ap.add_argument("--auto", action="store_true",
                     help="also run the planner's recommended config with "
                          "an online ReplanMonitor attached")
@@ -205,12 +222,15 @@ def main() -> int:
     requests = 24 if args.smoke else args.requests
     backends = tuple(args.backends or
                      (("fused",) if args.smoke else ("fused", "jnp")))
+    buckets = (args.buckets if args.buckets in ("auto", "off")
+               else int(args.buckets))
 
     g = dataset_like(args.dataset, scale=scale, seed=0).gcn_normalize()
     cfg = gnn.GNNConfig(in_dim=g.feature_len, hidden_dims=(args.hidden,),
                         out_dim=16, sample=args.sample)
 
-    print(f"{'setting':14s} {'backend':7s} {'policy':18s} {'served':>6s} "
+    print(f"{'setting':14s} {'backend':7s} {'policy':18s} {'layout':8s} "
+          f"{'pad':>5s} {'peakMB':>7s} {'served':>6s} "
           f"{'cmts':>4s} {'qps':>9s} {'c.p50ms':>8s} {'c.p99ms':>8s} "
           f"{'o.p50ms':>8s} {'o.p99ms':>8s} {'rpl':>3s}")
     rows = []
@@ -220,7 +240,7 @@ def main() -> int:
                            n_clusters=args.clusters, requests=requests,
                            batch=args.batch, rate=args.rate,
                            churn=args.churn, edge_churn=args.edge_churn,
-                           tick_every=args.tick_every)
+                           tick_every=args.tick_every, buckets=buckets)
             rows.append(r)
             _print_row(r)
 
@@ -237,6 +257,7 @@ def main() -> int:
                        batch=args.batch, rate=args.rate, churn=args.churn,
                        edge_churn=args.edge_churn,
                        tick_every=args.tick_every,
+                       buckets="auto" if rec.layout == "bucketed" else None,
                        monitor_factory=lambda srv:
                        ReplanMonitor(result).attach(srv))
         r["auto"] = True
@@ -247,7 +268,7 @@ def main() -> int:
     METRICS.update(
         dataset=args.dataset, n_nodes=g.n_nodes, requests=requests,
         batch=args.batch, churn=args.churn, backends=list(backends),
-        configs=rows)
+        buckets=str(buckets), configs=rows)
 
     if not args.smoke:
         return 0

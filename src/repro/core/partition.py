@@ -93,6 +93,34 @@ def _bfs_clusters(g: Graph, k: int, seed: int = 0) -> np.ndarray:
     return assignment
 
 
+def _chunk_clusters(g: Graph, k: int) -> np.ndarray:
+    """Contiguous node-balanced split: cluster of node i is ``i * k // N``.
+
+    O(N), locality-preserving for graphs whose node order is meaningful
+    (CSR builders emit destination-sorted ids) — the partitioner that makes
+    million-node graphs tractable where the BFS grower's Python frontier
+    loop is not."""
+    n = max(g.n_nodes, 1)
+    return (np.arange(g.n_nodes, dtype=np.int64) * k // n).astype(np.int32)
+
+
+def _edge_clusters(g: Graph, k: int) -> np.ndarray:
+    """Contiguous *edge*-balanced split: each cluster owns ~E/k edges.
+
+    On power-law graphs this deliberately skews the node counts (a chunk of
+    hubs is short, a chunk of leaves is long) — balanced per-device compute,
+    unbalanced per-device rows. That skew is exactly what the dense
+    ``[K, n_max, S]`` padding amplifies and the bucketed layout absorbs."""
+    deg = np.diff(g.indptr).astype(np.int64) + 1     # +1 keeps isolated
+    #                                                  nodes spreading
+    before = np.cumsum(deg) - deg                    # edge mass before node i
+    total = max(int(deg.sum()), 1)
+    return np.minimum(before * k // total, k - 1).astype(np.int32)
+
+
+PARTITION_METHODS = ("bfs", "chunk", "edge")
+
+
 def _sample_edge_mask(g: Graph, sample: int | None,
                       self_loops: bool = True) -> np.ndarray:
     """Boolean [E] mask of the edges the padded-sample runtime reads.
@@ -111,14 +139,26 @@ def _sample_edge_mask(g: Graph, sample: int | None,
 
 def partition(g: Graph, n_clusters: int, seed: int = 0,
               sample: int | None = None,
-              self_loops: bool = True) -> Partition:
-    """BFS-grow ``n_clusters`` clusters and derive all exchange tables.
+              self_loops: bool = True,
+              method: str = "bfs") -> Partition:
+    """Split into ``n_clusters`` clusters and derive all exchange tables.
 
     ``sample`` (optional) prunes the halo/comm tables to the edges the
     padded-sample runtime actually reads, so tabulated e_ij equals the rows
     the alltoall exchange measurably ships (``plan_execution`` passes its
-    sample through here)."""
-    assignment = _bfs_clusters(g, n_clusters, seed)
+    sample through here). ``method`` selects the assignment heuristic:
+    ``bfs`` (quality default), ``chunk`` (O(N) node-balanced contiguous) or
+    ``edge`` (O(N) edge-balanced contiguous — skewed node counts on
+    power-law graphs, pair with ``bucket_partition``)."""
+    if method not in PARTITION_METHODS:
+        raise ValueError(f"unknown partition method {method!r}; "
+                         f"choose from {PARTITION_METHODS}")
+    if method == "chunk":
+        assignment = _chunk_clusters(g, n_clusters)
+    elif method == "edge":
+        assignment = _edge_clusters(g, n_clusters)
+    else:
+        assignment = _bfs_clusters(g, n_clusters, seed)
     return _from_assignment(g, assignment, n_clusters, sample=sample,
                             self_loops=self_loops)
 
@@ -136,6 +176,72 @@ class LocalSubgraph:
     node_mask: np.ndarray   # [K, n_max] bool
 
 
+def _owner_slots(part: Partition) -> np.ndarray:
+    """[N] local slot of each node in its owning cluster's table.
+
+    Members are stored in ascending global-id order (``np.nonzero``), so a
+    stable argsort of the assignment reproduces every cluster's row order
+    without a per-cluster scan."""
+    a = part.assignment
+    order = np.argsort(a, kind="stable")
+    counts = np.bincount(a, minlength=part.n_clusters)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot = np.empty(len(a), np.int64)
+    slot[order] = np.arange(len(a)) - np.repeat(starts, counts)
+    return slot
+
+
+def _local_tables(g: Graph, part: Partition, cluster_ids, n_rows: int,
+                  s_cap: int, halo_base: int,
+                  self_loops: bool = True):
+    """Vectorized padded neighbor/weight tables for the given clusters.
+
+    Rows are the clusters' owned nodes (ascending global id), columns the
+    first ``s_cap - 1`` CSR neighbors plus the self loop; neighbor indices
+    point into the device-local table (owned rows [0, n_rows), halo rows
+    [halo_base, halo_base + h)). Shared by the dense layout
+    (``n_rows = n_max``, ``s_cap = sample``) and the bucketed one
+    (per-bucket caps)."""
+    cluster_ids = np.asarray(cluster_ids, np.int64)
+    nbr = np.zeros((len(cluster_ids), n_rows, s_cap), np.int32)
+    wts = np.zeros((len(cluster_ids), n_rows, s_cap), np.float32)
+    cap = s_cap - 1 if self_loops else s_cap
+    # self-loop weight honors the graph's normalization (gcn_normalize sets
+    # A_hat's diagonal 1/(d_i+1); unnormalized graphs keep A + I's 1.0)
+    sl = (g.self_loop if g.self_loop is not None
+          else np.ones(g.n_nodes, np.float32))
+    slot = _owner_slots(part)
+    assignment = part.assignment
+    h_counts = (part.halo_src >= 0).sum(axis=1)
+    for out_i, c in enumerate(cluster_ids):
+        rows = part.local_nodes[c][part.local_mask[c]]
+        m = len(rows)
+        if m == 0:
+            continue
+        deg = (g.indptr[rows + 1] - g.indptr[rows]).astype(np.int64)
+        take = np.minimum(deg, cap)
+        if cap > 0 and g.indices.size:  # edgeless graphs: self-loops only
+            e_idx = g.indptr[rows][:, None] + np.arange(cap)[None, :]
+            valid = np.arange(cap)[None, :] < take[:, None]
+            e_idx = np.where(valid, e_idx, 0)
+            v = g.indices[e_idx]
+            w = (g.edge_weight[e_idx] if g.edge_weight is not None
+                 else np.ones_like(e_idx, np.float32))
+            # halo_nodes are unique-sorted, so searchsorted recovers the
+            # halo row of every sample-reachable remote neighbor
+            hn = part.halo_nodes[c][:h_counts[c]]
+            remote = assignment[v] != c
+            loc = np.where(remote,
+                           halo_base + np.searchsorted(hn, v),
+                           slot[v])
+            nbr[out_i, :m, :cap] = np.where(valid, loc, 0)
+            wts[out_i, :m, :cap] = np.where(valid, w, 0.0)
+        if self_loops:
+            nbr[out_i, np.arange(m), take] = np.arange(m)
+            wts[out_i, np.arange(m), take] = sl[rows]
+    return nbr, wts
+
+
 def build_local_subgraphs(g: Graph, part: Partition, sample: int,
                           self_loops: bool = True) -> LocalSubgraph:
     if part.sample is not None and sample > part.sample:
@@ -144,36 +250,9 @@ def build_local_subgraphs(g: Graph, part: Partition, sample: int,
             f"partition's halo tables were pruned to — neighbors past the "
             f"pruning cut have no halo row; rebuild the partition with "
             f"sample >= {sample}")
-    k, n_max, h_max = part.n_clusters, part.n_max, part.h_max
-    nbr = np.zeros((k, n_max, sample), np.int32)
-    wts = np.zeros((k, n_max, sample), np.float32)
-    # self-loop weight honors the graph's normalization (gcn_normalize sets
-    # A_hat's diagonal 1/(d_i+1); unnormalized graphs keep A + I's 1.0)
-    sl = (g.self_loop if g.self_loop is not None
-          else np.ones(g.n_nodes, np.float32))
-    for c in range(k):
-        # global -> local mapping for owned + halo nodes
-        g2l = {}
-        for li, u in enumerate(part.local_nodes[c]):
-            if u >= 0:
-                g2l[int(u)] = li
-        for hi, u in enumerate(part.halo_nodes[c]):
-            if part.halo_src[c, hi] >= 0:
-                g2l[int(u)] = n_max + hi
-        for li in range(n_max):
-            u = part.local_nodes[c, li]
-            if u < 0:
-                continue
-            lo, hi = int(g.indptr[u]), int(g.indptr[u + 1])
-            take = min(hi - lo, sample - (1 if self_loops else 0))
-            for t in range(take):
-                v = int(g.indices[lo + t])
-                nbr[c, li, t] = g2l[v]
-                wts[c, li, t] = (g.edge_weight[lo + t]
-                                 if g.edge_weight is not None else 1.0)
-            if self_loops:
-                nbr[c, li, take] = li
-                wts[c, li, take] = sl[u]
+    nbr, wts = _local_tables(g, part, np.arange(part.n_clusters),
+                             part.n_max, sample, part.n_max,
+                             self_loops=self_loops)
     return LocalSubgraph(nbr, wts, part.local_mask)
 
 
@@ -186,6 +265,165 @@ def gather_features(g: Graph, part: Partition) -> np.ndarray:
         m = part.local_mask[c]
         out[c, m] = g.features[part.local_nodes[c][m]]
     return out
+
+
+_MIN_CAP = 8          # smallest bucket capacity (bounds retrace churn when
+#                       streaming rebuilds nudge tiny clusters around)
+
+
+def _pow2ceil(n: int, floor: int = 1) -> int:
+    b = max(int(floor), 1)
+    while b < n:
+        b <<= 1
+    return b
+
+
+@dataclasses.dataclass
+class BucketedPartition:
+    """Capacity-bucketed ragged layout over a dense :class:`Partition`.
+
+    Dense plans pad every cluster to the global ``n_max``/``h_max``/``S`` —
+    one hub cluster inflates every device's tensors. Here clusters are
+    grouped into power-of-two *capacity buckets*: all clusters in bucket b
+    share ``n_caps[b]`` owned rows, ``h_caps[b]`` halo rows and a neighbor
+    width ``s_caps[b]``, so each device pays for its bucket's capacity, not
+    the hub's. Power-of-two caps keep JIT shapes stable across streaming
+    rebuilds (DESIGN.md §12). The wrapped dense ``part`` (assignment, halo
+    and comm tables) stays the single source of truth for traffic
+    accounting; only the padded runtime tensors go ragged.
+    """
+    part: Partition
+    clusters: tuple               # per-bucket int32 cluster ids (ascending)
+    n_caps: tuple                 # per-bucket owned-row capacity (pow2)
+    h_caps: tuple                 # per-bucket halo-row capacity (pow2)
+    s_caps: tuple                 # per-bucket neighbor width (<= sample)
+    bucket_of: np.ndarray         # [K] bucket index of each cluster
+    index_in: np.ndarray          # [K] row of each cluster inside its bucket
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.clusters)
+
+    def real_rows(self) -> int:
+        return int(self.part.local_mask.sum())
+
+    def padded_rows(self) -> int:
+        return sum(len(cl) * cap
+                   for cl, cap in zip(self.clusters, self.n_caps))
+
+    def dense_padded_rows(self) -> int:
+        return self.part.n_clusters * self.part.n_max
+
+    def padding_ratio(self) -> float:
+        """Padded rows / real rows of the bucketed layout (>= 1)."""
+        return self.padded_rows() / max(self.real_rows(), 1)
+
+    def dense_padding_ratio(self) -> float:
+        """Padded rows / real rows the dense layout would pay."""
+        return self.dense_padded_rows() / max(self.real_rows(), 1)
+
+    def covers(self) -> bool:
+        """Every cluster's real rows/halos/neighbors fit its bucket's caps."""
+        sizes = self.part.local_mask.sum(axis=1)
+        halos = (self.part.halo_src >= 0).sum(axis=1)
+        for b, cl in enumerate(self.clusters):
+            if len(cl) == 0:
+                continue
+            if int(sizes[cl].max()) > self.n_caps[b]:
+                return False
+            if int(halos[cl].max()) > self.h_caps[b]:
+                return False
+        return True
+
+
+def bucket_partition(part: Partition, g: Graph | None = None,
+                     sample: int | None = None, max_buckets: int = 0,
+                     like: "BucketedPartition | None" = None,
+                     self_loops: bool = True) -> BucketedPartition:
+    """Group a dense partition's clusters into power-of-two capacity buckets.
+
+    ``n_caps`` is the pow2 ceiling of each cluster's size (floor
+    ``_MIN_CAP``); ``h_caps`` the pow2 ceiling of the largest halo count in
+    the bucket; ``s_caps`` trims the neighbor width to the largest *used*
+    slot count in the bucket (needs ``g`` + ``sample``; falls back to
+    ``sample``). ``max_buckets > 0`` merges the smallest-capacity buckets
+    upward until at most that many remain. ``like=`` reuses an existing
+    bucketing's grouping and never shrinks its caps — streaming rebuilds
+    keep JIT shapes stable (same assignment => same groups)."""
+    sample = sample if sample is not None else part.sample
+    sizes = part.local_mask.sum(axis=1)
+    hcounts = (part.halo_src >= 0).sum(axis=1)
+    if like is not None:
+        groups = [np.asarray(cl, np.int64) for cl in like.clusters]
+        n_caps = [max(c, _pow2ceil(int(sizes[cl].max(initial=0)), _MIN_CAP))
+                  for c, cl in zip(like.n_caps, groups)]
+    else:
+        caps = np.array([_pow2ceil(int(s), _MIN_CAP) for s in sizes])
+        uniq = sorted(set(caps.tolist()))
+        groups = [np.nonzero(caps == u)[0].astype(np.int64) for u in uniq]
+        n_caps = list(uniq)
+        while max_buckets > 0 and len(groups) > max_buckets:
+            groups[1] = np.sort(np.concatenate([groups[0], groups[1]]))
+            n_caps[1] = max(n_caps[0], n_caps[1])
+            groups, n_caps = groups[1:], n_caps[1:]
+    h_caps, s_caps = [], []
+    deg = np.diff(g.indptr) if g is not None else None
+    for b, cl in enumerate(groups):
+        hc = _pow2ceil(int(hcounts[cl].max(initial=0)), 1)
+        sc = int(sample) if sample is not None else 1
+        if deg is not None and sample is not None and len(cl):
+            cap = sample - 1 if self_loops else sample
+            rows = np.concatenate(
+                [part.local_nodes[c][part.local_mask[c]] for c in cl])
+            used = int(np.minimum(deg[rows], cap).max(initial=0))
+            used += 1 if self_loops else 0
+            sc = min(int(sample), _pow2ceil(max(used, 1)))
+        if like is not None:
+            hc = max(hc, like.h_caps[b])
+            sc = max(sc, like.s_caps[b])
+        h_caps.append(hc)
+        s_caps.append(sc)
+    bucket_of = np.zeros(part.n_clusters, np.int32)
+    index_in = np.zeros(part.n_clusters, np.int32)
+    for b, cl in enumerate(groups):
+        bucket_of[cl] = b
+        index_in[cl] = np.arange(len(cl))
+    return BucketedPartition(part, tuple(groups), tuple(int(c) for c in n_caps),
+                             tuple(h_caps), tuple(s_caps),
+                             bucket_of, index_in)
+
+
+def build_bucketed_subgraphs(g: Graph, bpart: BucketedPartition,
+                             self_loops: bool = True):
+    """Per-bucket padded neighbor/weight tables.
+
+    Returns (neighbors, weights): tuples of per-bucket arrays
+    ``[K_b, n_caps[b], s_caps[b]]`` in the same device-local index
+    convention as :class:`LocalSubgraph` — owned rows first, halo rows at
+    ``n_caps[b] + h``. Trailing neighbor slots past ``s_caps[b]`` carry
+    weight zero in the dense layout, and the kernels accumulate the S axis
+    sequentially, so dropping them is bit-identical (DESIGN.md §12)."""
+    nbrs, wtss = [], []
+    for b, cl in enumerate(bpart.clusters):
+        nbr, wts = _local_tables(g, bpart.part, cl, bpart.n_caps[b],
+                                 bpart.s_caps[b], bpart.n_caps[b],
+                                 self_loops=self_loops)
+        nbrs.append(nbr)
+        wtss.append(wts)
+    return tuple(nbrs), tuple(wtss)
+
+
+def gather_bucketed_features(g: Graph, bpart: BucketedPartition):
+    """Tuple of per-bucket ``[K_b, n_caps[b], F]`` owned-feature tables."""
+    part = bpart.part
+    out = []
+    for b, cl in enumerate(bpart.clusters):
+        f = np.zeros((len(cl), bpart.n_caps[b], g.feature_len), np.float32)
+        for j, c in enumerate(cl):
+            m = part.local_mask[c]
+            f[j, :int(m.sum())] = g.features[part.local_nodes[c][m]]
+        out.append(f)
+    return tuple(out)
 
 
 @dataclasses.dataclass
@@ -269,11 +507,7 @@ def halo_exchange_tables(part: Partition):
     """
     k, h_max = part.n_clusters, part.h_max
     slot = np.zeros((k, h_max), np.int32)
-    # global id -> owner slot
-    owner_slot = np.zeros(part.assignment.shape[0], np.int32)
-    for c in range(k):
-        m = part.local_mask[c]
-        owner_slot[part.local_nodes[c][m]] = np.nonzero(m)[0]
+    owner_slot = _owner_slots(part)
     for c in range(k):
         valid = part.halo_src[c] >= 0
         slot[c, valid] = owner_slot[part.halo_nodes[c][valid]]
@@ -309,12 +543,16 @@ class ExecutionPlan:
     #                                 (tier-1) partition for semi
     sub: LocalSubgraph | None
     feats: np.ndarray               # [K, n_max, F] (centralized: [1, N, F];
-    #                                 semi: [R, P, m_max, F] spoke tables)
+    #                                 semi: [R, P, m_max, F] spoke tables;
+    #                                 bucketed non-semi: tuple of per-bucket
+    #                                 [K_b, n_cap, F] tables)
     neighbors: np.ndarray           # [K, n_max, S] device-local sample
-    weights: np.ndarray             # [K, n_max, S]
+    #                                 (bucketed: tuple of [K_b, n_cap, s_cap])
+    weights: np.ndarray             # [K, n_max, S] (bucketed: tuple)
     hier: HierPartition | None = None   # set for setting == "semi"
     mapping: object | None = None   # cached CompiledMapping (repro.mapper)
     tuned: object | None = None     # cached TunedKernels (repro.tuning)
+    bucketed: BucketedPartition | None = None   # ragged layout (DESIGN §12)
 
     def gnn_config(self, cfg):
         """Rebind a GNNConfig to this plan's backend/sample (and its tuned
@@ -330,7 +568,7 @@ class ExecutionPlan:
         ``repro.tuning.TuneCache`` (or a path to load one from); winners
         are roofline-pruned, measured on the current platform, and
         bit-identical to the defaults by construction. Returns the
-        ``TunedKernels`` bundle (empty on non-fused backends)."""
+        ``TunedKernels`` bundle (empty on the jnp backend)."""
         from repro.tuning import TuneCache, tune_plan
         if isinstance(cache, str):
             cache = TuneCache.load(cache)
@@ -338,7 +576,8 @@ class ExecutionPlan:
                                **tune_kw)
         return self.tuned
 
-    def make_forward(self, cfg, mesh=None, mode: str = "alltoall"):
+    def make_forward(self, cfg, mesh=None, mode: str = "alltoall",
+                     overlap: str = "overlap"):
         """Runnable forward for this plan: ``fn(params) -> [K, n_max, out]``.
 
         ``mesh`` (optional) with exactly ``n_clusters`` devices selects the
@@ -346,10 +585,33 @@ class ExecutionPlan:
         runs the identical dataflow on however many devices exist. ``mode``
         picks the halo-exchange strategy (``allgather``/``alltoall``) on
         both runtimes and, for semi, on the tier-1 head<->head exchange.
+
+        Bucketed plans return a *tuple* of per-bucket ``[K_b, n_cap, out]``
+        arrays (``scatter`` accepts it) and run the mesh-free double-buffered
+        exchange: ``overlap="overlap"`` dispatches every bucket's halo
+        gather before any bucket's layer step so the sends overlap the MVMs;
+        ``"serial"`` interleaves them (same values — DESIGN.md §12).
         """
         import jax.numpy as jnp
         from repro.core import gnn
         cfg = self.gnn_config(cfg)
+        if self.bucketed is not None:
+            from repro.distributed.halo import (
+                build_bucketed_halo_plan, make_emulated_bucketed_forward,
+                make_emulated_bucketed_semi_forward)
+            bplan = build_bucketed_halo_plan(self.bucketed)
+            nbrs = tuple(jnp.asarray(x) for x in self.neighbors)
+            wtss = tuple(jnp.asarray(x) for x in self.weights)
+            if self.setting == "semi":
+                fn = make_emulated_bucketed_semi_forward(
+                    cfg, bplan, self.hier, self.bucketed, mode=mode,
+                    overlap=overlap)
+                spoke = jnp.asarray(self.feats)
+                return lambda params: fn(params, spoke, nbrs, wtss)
+            fn = make_emulated_bucketed_forward(cfg, bplan, mode=mode,
+                                                overlap=overlap)
+            feats = tuple(jnp.asarray(f) for f in self.feats)
+            return lambda params: fn(params, feats, nbrs, wtss)
         feats = jnp.asarray(self.feats)
         nbr = jnp.asarray(self.neighbors)
         wts = jnp.asarray(self.weights)
@@ -378,8 +640,21 @@ class ExecutionPlan:
             fn = make_emulated_forward(cfg, plan, mode=mode)
         return lambda params: fn(params, feats, nbr, wts)
 
-    def scatter(self, out: np.ndarray) -> np.ndarray:
-        """Map per-cluster outputs [K, n_max, D] to global node order."""
+    def scatter(self, out) -> np.ndarray:
+        """Map per-cluster outputs [K, n_max, D] to global node order.
+
+        Bucketed plans pass the forward's tuple of per-bucket
+        ``[K_b, n_cap, D]`` arrays."""
+        if self.bucketed is not None and isinstance(out, (list, tuple)):
+            parts = [np.asarray(o) for o in out]
+            full = np.zeros((self.graph.n_nodes, parts[0].shape[-1]),
+                            parts[0].dtype)
+            sizes = self.part.local_mask.sum(axis=1)
+            for b, cl in enumerate(self.bucketed.clusters):
+                for j, c in enumerate(cl):
+                    m = int(sizes[c])
+                    full[self.part.local_nodes[c, :m]] = parts[b][j, :m]
+            return full
         out = np.asarray(out)
         if self.setting == "centralized":
             return out[0]
@@ -388,6 +663,48 @@ class ExecutionPlan:
             m = self.part.local_mask[c]
             full[self.part.local_nodes[c][m]] = out[c][m]
         return full
+
+    def layout_stats(self, cfg=None) -> dict:
+        """Deterministic padded-layout accounting for this plan.
+
+        ``padding_ratio`` is padded rows / real rows of the layout the plan
+        actually runs; ``dense_*`` keys price the uniform dense layout for
+        the same partition so the bucketing win is a ratio of two numbers
+        from one partition. ``peak_device_bytes`` models the largest single
+        device's live working set (feature table + halo rows + activation
+        double-buffer + neighbor/weight tables at the widest layer dim of
+        ``cfg``, float32/int32)."""
+        f_max = int(max(cfg.dims)) if cfg is not None else max(
+            int(self.graph.feature_len), 1)
+
+        def _peak(n_rows: int, h_rows: int, s: int) -> int:
+            return 4 * (2 * n_rows * f_max + h_rows * f_max
+                        + 2 * n_rows * s)
+
+        if self.part is None:                     # dense centralized
+            rows = max(int(self.graph.n_nodes), 1)
+            peak = _peak(rows, 0, self.sample)
+            return {"layout": "dense", "real_rows": rows,
+                    "padded_rows": rows, "padding_ratio": 1.0,
+                    "dense_padded_rows": rows, "dense_padding_ratio": 1.0,
+                    "peak_device_bytes": peak,
+                    "dense_peak_device_bytes": peak}
+        real = max(int(self.part.local_mask.sum()), 1)
+        dense_rows = self.part.n_clusters * self.part.n_max
+        dense_peak = _peak(self.part.n_max, self.part.h_max, self.sample)
+        if self.bucketed is None:
+            rows, peak, layout = dense_rows, dense_peak, "dense"
+        else:
+            bp = self.bucketed
+            rows, layout = bp.padded_rows(), "bucketed"
+            peak = max(_peak(bp.n_caps[b], bp.h_caps[b], bp.s_caps[b])
+                       for b in range(bp.n_buckets))
+        return {"layout": layout, "real_rows": real, "padded_rows": rows,
+                "padding_ratio": rows / real,
+                "dense_padded_rows": dense_rows,
+                "dense_padding_ratio": dense_rows / real,
+                "peak_device_bytes": peak,
+                "dense_peak_device_bytes": dense_peak}
 
     def predicted_metrics(self, workload_scaled: bool = False,
                           mode: str = "calibrated", inventory=None,
@@ -442,24 +759,47 @@ class ExecutionPlan:
         return measure_execution(self, cfg=cfg, mode=mode)
 
 
+def _parse_buckets(buckets) -> int | None:
+    """Normalize the ``buckets`` knob: None => dense, 0 => unlimited
+    buckets, N > 0 => at most N buckets."""
+    if buckets in (None, 0, "off", "dense", False):
+        return None
+    if buckets in ("auto", -1, True):
+        return 0
+    n = int(buckets)
+    if n <= 0:
+        raise ValueError(f"buckets must be 'auto', 'off' or a positive "
+                         f"count, got {buckets!r}")
+    return n
+
+
 def plan_execution(g: Graph, setting: str = "centralized",
                    backend: str = "jnp", sample: int = 16,
                    n_clusters: int | None = None,
                    seed: int = 0,
-                   spokes_per_head: int = 4) -> ExecutionPlan:
+                   spokes_per_head: int = 4,
+                   buckets=None,
+                   partition_method: str = "bfs") -> ExecutionPlan:
     """Build the ExecutionPlan for one (setting, backend) combination.
 
     ``n_clusters`` defaults per setting: 1 (centralized), 8 (decentralized
     — one per edge device), 4 (semi — cluster heads, each fronting
     ``spokes_per_head`` member edge devices). Halo/comm tables are pruned
     to the ``sample``-reachable edges the kernels read.
-    """
+
+    ``buckets`` selects the capacity-bucketed ragged layout (DESIGN.md
+    §12): ``None``/``"off"`` keeps the uniform dense padding, ``"auto"``
+    buckets clusters by their natural pow2 capacities, an int N caps the
+    bucket count at N. ``partition_method`` picks the cluster heuristic
+    (``bfs``/``chunk``/``edge`` — see ``partition``)."""
     assert setting in ("centralized", "decentralized", "semi"), setting
-    if setting == "centralized":
+    max_b = _parse_buckets(buckets)
+    if setting == "centralized" and max_b is None:
         nbr, wts = g.neighbor_sample(sample)
         return ExecutionPlan(setting, backend, sample, 1, g, None, None,
                              g.features[None], nbr[None], wts[None])
-    k = n_clusters or (8 if setting == "decentralized" else 4)
+    k = 1 if setting == "centralized" else (
+        n_clusters or (8 if setting == "decentralized" else 4))
     # a cluster must own at least one node: planner sweeps over tiny test
     # graphs would otherwise build empty devices (configuration-space
     # robustness, DESIGN.md §10)
@@ -467,12 +807,30 @@ def plan_execution(g: Graph, setting: str = "centralized",
     if setting == "semi":
         hier = hier_partition(g, k, nodes_per_region=spokes_per_head,
                               sample=sample, seed=seed)
+        if max_b is not None:
+            bp = bucket_partition(hier.region, g, sample, max_buckets=max_b)
+            nbrs, wtss = build_bucketed_subgraphs(g, bp)
+            feats = gather_spoke_features(g, hier)
+            return ExecutionPlan(setting, backend, sample, k, g,
+                                 hier.region, None, feats, nbrs, wtss,
+                                 hier=hier, bucketed=bp)
         sub = build_local_subgraphs(g, hier.region, sample)
         feats = gather_spoke_features(g, hier)
         return ExecutionPlan(setting, backend, sample, k, g, hier.region,
                              sub, feats, sub.neighbors, sub.weights,
                              hier=hier)
-    part = partition(g, k, seed=seed, sample=sample)
+    if setting == "centralized":
+        part = _from_assignment(g, np.zeros(g.n_nodes, np.int32), 1,
+                                sample=sample)
+    else:
+        part = partition(g, k, seed=seed, sample=sample,
+                         method=partition_method)
+    if max_b is not None:
+        bp = bucket_partition(part, g, sample, max_buckets=max_b)
+        nbrs, wtss = build_bucketed_subgraphs(g, bp)
+        feats = gather_bucketed_features(g, bp)
+        return ExecutionPlan(setting, backend, sample, k, g, part, None,
+                             feats, nbrs, wtss, bucketed=bp)
     sub = build_local_subgraphs(g, part, sample)
     feats = gather_features(g, part)
     return ExecutionPlan(setting, backend, sample, k, g, part, sub,

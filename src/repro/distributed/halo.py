@@ -44,12 +44,14 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.partition import HierPartition, Partition
+from repro.core.partition import (BucketedPartition, HierPartition,
+                                  Partition)
 from repro.kernels.crossbar_mvm import crossbar_matmul_signed_ref
 from repro.kernels.csr_aggregate import aggregate, csr_aggregate_ref
 from repro.kernels.fused_layer import fused_gnn_layer
 
 EXCHANGE_MODES = ("allgather", "alltoall")
+OVERLAP_MODES = ("overlap", "serial")
 
 
 @dataclasses.dataclass
@@ -124,7 +126,8 @@ def _layer_step(table, nbr, wts, layer, cfg, act: bool):
         return fused_gnn_layer(table, nbr, wts, layer["w"], layer["b"],
                                cfg.numerics, relu=act, tuned=cfg.tuned)
     z = (csr_aggregate_ref(table, nbr, wts) if cfg.backend == "jnp"
-         else aggregate(table, nbr, wts, backend=cfg.backend))
+         else aggregate(table, nbr, wts, backend=cfg.backend,
+                        tuned=cfg.tuned))
     if cfg.numerics.ideal:
         x = jnp.dot(z, layer["w"], preferred_element_type=jnp.float32)
     else:
@@ -319,6 +322,176 @@ def make_semi_forward(mesh, cfg, plan: TwoTierPlan,
     def forward(params, spoke_feats, nbr, wts):
         return fn(params, spoke_feats, nbr, wts,
                   *(consts[n] for n in names))
+
+    return forward
+
+
+@dataclasses.dataclass
+class BucketedHaloPlan:
+    """Static exchange plan for the capacity-bucketed layout (DESIGN.md §12).
+
+    The exchange is realized as ONE gather per destination bucket out of a
+    *flat* table concatenating every bucket's owned rows
+    (``cluster_offset[c] = bucket base + index_in[c] * n_cap``): ragged
+    per-bucket shapes stay out of the gather indices, and each bucket's
+    fetch is an independent launch the scheduler can overlap with another
+    bucket's layer step. Wire-level billing stays on the dense partition's
+    send/recv tables (``repro.distributed.traffic``) — this plan only moves
+    values.
+    """
+    flat_src: tuple       # per bucket [K_b, h_cap] int32 into the flat table
+    halo_mask: tuple      # per bucket [K_b, h_cap] float32
+    n_caps: tuple
+    h_caps: tuple
+    flat_rows: int        # total rows of the concatenated owned table
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.flat_src)
+
+
+def build_bucketed_halo_plan(bpart: BucketedPartition) -> BucketedHaloPlan:
+    from repro.core.partition import halo_exchange_tables
+    part = bpart.part
+    src_c, src_s, mask = halo_exchange_tables(part)
+    offset = np.zeros(part.n_clusters, np.int64)
+    base = 0
+    for b, cl in enumerate(bpart.clusters):
+        for j, c in enumerate(cl):
+            offset[c] = base + j * bpart.n_caps[b]
+        base += len(cl) * bpart.n_caps[b]
+    hcount = mask.sum(axis=1)
+    fsrc, fmask = [], []
+    for b, cl in enumerate(bpart.clusters):
+        hc = bpart.h_caps[b]
+        fs = np.zeros((len(cl), hc), np.int32)
+        fm = np.zeros((len(cl), hc), np.float32)
+        for j, c in enumerate(cl):
+            h = int(hcount[c])
+            fs[j, :h] = offset[src_c[c, :h]] + src_s[c, :h]
+            fm[j, :h] = 1.0
+        fsrc.append(fs)
+        fmask.append(fm)
+    return BucketedHaloPlan(tuple(fsrc), tuple(fmask), bpart.n_caps,
+                            bpart.h_caps, base)
+
+
+@jax.jit
+def _flat_rows(*xs):
+    """Concatenate per-bucket owned tables [K_b, n_cap, F] into the flat
+    [sum(K_b * n_cap), F] table the bucketed halo gathers index."""
+    return jnp.concatenate([x.reshape(-1, x.shape[-1]) for x in xs], axis=0)
+
+
+@jax.jit
+def _gather_halo(flat, idx, mask):
+    """One bucket's halo fetch: [.., h_cap, F] rows out of the flat table,
+    padding rows masked to zero."""
+    return flat[idx] * mask[..., None]
+
+
+@partial(jax.jit, static_argnames=("cfg", "act"))
+def _bucket_layer(x, halo, nbr, wts, w, b, *, cfg, act):
+    """One GNN layer over one bucket [K_b, n_cap(+h_cap), ...].
+
+    The halo buffer is freshly allocated per layer by ``_gather_halo`` and
+    dead after the concat; it is not donated here because its shape never
+    matches an output (XLA would warn and ignore it) — the donation that
+    kills per-tick host round-trips lives on the streaming engine's
+    same-shape activation-cache scatters (DESIGN.md §12). The owned table
+    ``x`` is never donated — callers hold it across repeated calls."""
+    layer = {"w": w, "b": b}
+    table = jnp.concatenate([x, halo], axis=1)
+    return jnp.stack([
+        _layer_step(table[c], nbr[c], wts[c], layer, cfg, act)
+        for c in range(x.shape[0])])
+
+
+def make_emulated_bucketed_forward(cfg, bplan: BucketedHaloPlan,
+                                   mode: str = "alltoall",
+                                   overlap: str = "overlap"):
+    """Mesh-free decentralized forward over the bucketed ragged layout.
+
+    feats/nbr/wts: tuples of per-bucket [K_b, n_cap, {F, s_cap}] tables.
+    Returns a tuple of per-bucket [K_b, n_cap, out_dim] arrays.
+
+    ``mode`` is accepted for API symmetry with the dense runtimes: both
+    exchange strategies produce identical halo *values*, and the bucketed
+    plan realizes them with the same flat gather — the allgather/alltoall
+    distinction lives in the traffic accountant's billing of the dense
+    send/recv tables, not here. ``overlap="overlap"`` dispatches every
+    bucket's halo gather before any bucket's layer step, so JAX's async
+    dispatch overlaps the fetches (the comm stand-in) with the MVMs;
+    ``"serial"`` interleaves fetch -> step per bucket. Same values either
+    way (gate: overlapped tick <= serialized, benchmarks/scale_serve.py).
+    """
+    assert mode in EXCHANGE_MODES, mode
+    assert overlap in OVERLAP_MODES, overlap
+    fidx = tuple(jnp.asarray(i) for i in bplan.flat_src)
+    fmask = tuple(jnp.asarray(m) for m in bplan.halo_mask)
+    nb = bplan.n_buckets
+
+    def forward(params, feats, nbrs, wtss):
+        xs = list(feats)
+        n_layers = len(params)
+        for i, layer in enumerate(params):
+            act = i < n_layers - 1 or cfg.final_activation
+            flat = _flat_rows(*xs)
+            if overlap == "overlap":
+                halos = [_gather_halo(flat, fidx[b], fmask[b])
+                         for b in range(nb)]
+                xs = [_bucket_layer(xs[b], halos[b], nbrs[b], wtss[b],
+                                    layer["w"], layer["b"], cfg=cfg,
+                                    act=act)
+                      for b in range(nb)]
+            else:
+                for b in range(nb):
+                    halo = _gather_halo(flat, fidx[b], fmask[b])
+                    xs[b] = _bucket_layer(xs[b], halo, nbrs[b], wtss[b],
+                                          layer["w"], layer["b"], cfg=cfg,
+                                          act=act)
+        return tuple(xs)
+
+    return forward
+
+
+_tier0_bucket_gather = jax.jit(
+    lambda spoke, cids, gs, sl, gm:
+    spoke[cids[:, None], gs, sl] * gm[..., None])
+
+
+def make_emulated_bucketed_semi_forward(cfg, bplan: BucketedHaloPlan,
+                                        hier: HierPartition,
+                                        bpart: BucketedPartition,
+                                        mode: str = "alltoall",
+                                        overlap: str = "overlap"):
+    """Two-tier semi forward over the bucketed layout: the tier-0
+    spoke->head gather assembles each bucket's region tables straight from
+    the (dense) spoke tables, then the bucketed tier-1 runtime takes over.
+
+    spoke_feats: [R, P, m_max, F]; nbr/wts: per-bucket tuples.
+    Returns a tuple of per-bucket [K_b, n_cap, out_dim] arrays.
+    """
+    t0 = []
+    n_max = hier.region.n_max
+    for b, cl in enumerate(bpart.clusters):
+        ncap = bplan.n_caps[b]
+        w = min(ncap, n_max)
+        gs = np.zeros((len(cl), ncap), np.int32)
+        sl = np.zeros((len(cl), ncap), np.int32)
+        gm = np.zeros((len(cl), ncap), np.float32)
+        gs[:, :w] = hier.gather_spoke[cl, :w]
+        sl[:, :w] = hier.gather_slot[cl, :w]
+        gm[:, :w] = hier.region.local_mask[cl, :w]
+        t0.append(tuple(jnp.asarray(a) for a in
+                        (cl.astype(np.int32), gs, sl, gm)))
+    inner = make_emulated_bucketed_forward(cfg, bplan, mode=mode,
+                                           overlap=overlap)
+
+    def forward(params, spoke_feats, nbrs, wtss):
+        feats = tuple(_tier0_bucket_gather(spoke_feats, cids, gs, sl, gm)
+                      for cids, gs, sl, gm in t0)
+        return inner(params, feats, nbrs, wtss)
 
     return forward
 

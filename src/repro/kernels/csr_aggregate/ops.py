@@ -1,9 +1,15 @@
 """Jitted public wrapper for the aggregation-core kernel.
 
-Pads the feature dim to the 128-lane block multiple and exposes a
+Pads the feature dim to the block-feature (``bf``) multiple and exposes a
 ``backend`` switch: ``pallas`` (interpret-mode on CPU, compiled on TPU) or
 ``jnp`` (the oracle — used on the distributed hot path where XLA's own fusion
 is preferable on a host backend).
+
+``bf`` resolves like the fused kernel's (DESIGN.md §11): an explicit value
+wins, else a ``TunedKernels`` bundle passed via ``tuned=`` (threaded from
+``GNNConfig.tuned`` by the distributed layer), else the process-wide tuning
+registry, else 128. All candidates are bit-identical — ``bf`` only re-tiles
+the feature axis; the S-axis accumulation order is unchanged.
 """
 from __future__ import annotations
 
@@ -15,11 +21,27 @@ import jax.numpy as jnp
 from .csr_aggregate import csr_aggregate as _pallas_aggregate
 from .ref import csr_aggregate_ref
 
+DEFAULT_BF = 128
+
+
+def _resolve_bf(x, neighbors, bf, tuned) -> int:
+    if bf is not None:
+        return int(bf)
+    from repro.tuning.registry import lookup as _registry_lookup
+    from repro.tuning.space import AggregateGeometry
+    geom = AggregateGeometry(nd=int(neighbors.shape[0]), n=int(x.shape[0]),
+                             f=int(x.shape[1]),
+                             sample=int(neighbors.shape[1]))
+    cfg = tuned.lookup(geom.key()) if tuned is not None else None
+    if cfg is None:
+        cfg = _registry_lookup(geom.key())
+    return int(cfg.bf) if cfg is not None else DEFAULT_BF
+
 
 @functools.partial(jax.jit, static_argnames=("backend", "bf", "interpret"))
-def aggregate(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
-              backend: str = "jnp", bf: int = 128,
-              interpret: bool | None = None) -> jax.Array:
+def _aggregate(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
+               backend: str, bf: int,
+               interpret: bool | None) -> jax.Array:
     if backend == "jnp":
         return csr_aggregate_ref(x, neighbors, weights)
     assert backend == "pallas", backend
@@ -29,3 +51,17 @@ def aggregate(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
         x = jnp.pad(x, ((0, 0), (0, pad)))
     out = _pallas_aggregate(x, neighbors, weights, bf=bf, interpret=interpret)
     return out[:, :f]
+
+
+def aggregate(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
+              backend: str = "jnp", bf: int | None = None,
+              tuned=None, interpret: bool | None = None) -> jax.Array:
+    """Weighted neighbor aggregation Z = sum_s w[:, s] * X[nbr[:, s]].
+
+    ``bf=None`` resolves the feature block size from ``tuned`` (a
+    ``repro.tuning.TunedKernels``), then the registry, then 128 — shape
+    resolution is eager (outside jit) so the block size is a static arg of
+    the underlying kernel launch."""
+    bf = _resolve_bf(x, neighbors, bf, tuned) if backend == "pallas" else (
+        bf or DEFAULT_BF)
+    return _aggregate(x, neighbors, weights, backend, bf, interpret)

@@ -89,7 +89,9 @@ class GNNServer:
             self._forward = self.plan.make_forward(self.cfg, mesh=self._mesh,
                                                    mode=self.mode)
         out = jax.block_until_ready(self._forward(self.params))
-        self.embeddings = self.plan.scatter(np.asarray(out))
+        # bucketed plans return a tuple of ragged per-bucket tables;
+        # scatter handles both shapes (np.asarray would choke on a tuple)
+        self.embeddings = self.plan.scatter(out)
         self.refreshes += 1
         self._served_version = self.version
         return time.perf_counter() - t0
@@ -168,6 +170,10 @@ def main() -> None:
     ap.add_argument("--mode", default="alltoall",
                     choices=("allgather", "alltoall"),
                     help="halo-exchange strategy (semi: tier-1)")
+    ap.add_argument("--buckets", default="off", metavar="auto|off|N",
+                    help="capacity-bucketed ragged layout (DESIGN.md §12): "
+                         "'auto' buckets clusters by pow2 capacity, an int "
+                         "caps the bucket count, 'off' keeps dense padding")
     ap.add_argument("--sample", type=int, default=8)
     ap.add_argument("--hidden", type=int, default=64)
     ap.add_argument("--requests", type=int, default=64)
@@ -211,14 +217,25 @@ def main() -> None:
         args.clusters, args.policy = rec.n_clusters, rec.policy
     n_dev = len(jax.devices())
     k = args.clusters or (n_dev if args.setting == "decentralized" else 4)
+    buckets = args.buckets if args.buckets in ("auto", "off") \
+        else int(args.buckets)
     plan = plan_execution(g, args.setting, backend=args.backend,
                           sample=args.sample,
                           n_clusters=None if args.setting == "centralized"
                           else k,
-                          spokes_per_head=args.spokes)
+                          spokes_per_head=args.spokes,
+                          buckets=buckets)
     mesh = (make_mesh((n_dev,), ("data",))
             if plan.n_clusters == n_dev and args.setting != "centralized"
-            else None)
+            and plan.bucketed is None else None)
+    if plan.bucketed is not None:
+        ls = plan.layout_stats()
+        print(f"bucketed layout: {plan.bucketed.n_buckets} buckets, "
+              f"caps {plan.bucketed.n_caps}; padding ratio "
+              f"{ls['padding_ratio']:.2f}x vs dense "
+              f"{ls['dense_padding_ratio']:.2f}x, peak device bytes "
+              f"{ls['peak_device_bytes']:,} vs dense "
+              f"{ls['dense_peak_device_bytes']:,}")
     cfg = gnn.GNNConfig(in_dim=g.feature_len, hidden_dims=(args.hidden,),
                         out_dim=16, sample=args.sample)
     if args.tune:

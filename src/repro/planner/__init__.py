@@ -24,19 +24,20 @@ mixed workload) and ``benchmarks/load_serve.py`` (measured serving
 throughput / latency percentiles per config).
 """
 from .evaluate import (DEFAULT_EVALUATORS, PlanContext, cost_evaluator,
-                       evaluate, mapper_evaluator, traffic_evaluator)
+                       evaluate, mapper_evaluator, memory_evaluator,
+                       traffic_evaluator)
 from .objective import OBJECTIVES, effective_compute, score, tick_costs
 from .plan import (PlannerResult, ScoredCandidate, pareto_frontier, plan,
                    score_candidate)
 from .replan import ReplanEvent, ReplanMonitor
-from .space import (BACKENDS, POLICIES, SETTINGS, Candidate,
+from .space import (BACKENDS, LAYOUTS, POLICIES, SETTINGS, Candidate,
                     WorkloadProfile, candidate_space)
 
 __all__ = [
-    "BACKENDS", "POLICIES", "SETTINGS",
+    "BACKENDS", "LAYOUTS", "POLICIES", "SETTINGS",
     "Candidate", "WorkloadProfile", "candidate_space",
     "DEFAULT_EVALUATORS", "PlanContext", "cost_evaluator", "evaluate",
-    "mapper_evaluator", "traffic_evaluator",
+    "mapper_evaluator", "memory_evaluator", "traffic_evaluator",
     "OBJECTIVES", "effective_compute", "score", "tick_costs",
     "PlannerResult", "ScoredCandidate", "pareto_frontier", "plan",
     "score_candidate",

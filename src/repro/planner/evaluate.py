@@ -23,10 +23,16 @@ Built-ins:
     (``mapper.compile_mapping``) at the candidate's geometry:
     ``t_compute_derived`` / ``energy_j`` / occupancy. The only evaluator
     that can see ``xbar_size``.
+  * ``memory_evaluator`` — modeled per-device working-set bytes for the
+    candidate's data-plane layout (``device_bytes``): the Pareto memory
+    axis that separates dense from bucketed candidates. Closed-form, no
+    partition built.
   * ``traffic_evaluator`` — measured wire bytes on a *concrete* graph
     (``distributed.traffic.measure_execution`` / ``measure_incremental``):
     what a full refresh ships and what one policy-committed incremental
-    tick ships. Requires ``ctx.graph``; skipped otherwise.
+    tick ships, plus the measured layout accounting
+    (``padding_ratio`` / ``peak_device_bytes``). Requires ``ctx.graph``;
+    skipped otherwise.
 """
 from __future__ import annotations
 
@@ -40,8 +46,8 @@ class PlanContext:
     """Everything an evaluator may read: the workload statistics, the
     device inventory family, the demand profile, and (optionally) a
     concrete graph for measured evaluators. ``plan_cache`` memoizes built
-    ExecutionPlans per (setting, n_clusters) so the measured evaluators
-    do not re-partition for every xbar/policy variant."""
+    ExecutionPlans per (setting, n_clusters, layout) so the measured
+    evaluators do not re-partition for every xbar/policy variant."""
     stats: object                      # core.graph.GraphStats
     workload: WorkloadProfile
     hw: object = None                  # core.costmodel.HardwareParams
@@ -74,7 +80,7 @@ class PlanContext:
         concrete graph; None when no graph was supplied."""
         if self.graph is None:
             return None
-        key = (cand.setting, cand.n_clusters)
+        key = (cand.setting, cand.n_clusters, cand.layout)
         if key not in self.plan_cache:
             self.plan_cache[key] = cand.build_plan(
                 self.graph, self.workload.sample,
@@ -129,6 +135,36 @@ def mapper_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
     return ctx.memo[key]
 
 
+def memory_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
+    """Modeled per-device working-set bytes for the candidate's data-plane
+    layout — the Pareto memory axis (DESIGN.md §12). Deliberately a coarse
+    closed-form model (no partition is built, so the full grid stays
+    partition-free): the worst device holds ``rows`` padded feature rows
+    (double-buffered activations), their sampled halo, and the int32
+    neighbor/weight tables. Dense padding is priced at the modeled skew of
+    the worst cluster (~2x the mean on the power-law graphs the paper
+    serves); bucketed padding at the pow2-capacity average (~4/3x). The
+    measured counterpart (``peak_device_bytes`` from
+    ``ExecutionPlan.layout_stats``) is attached by ``traffic_evaluator``
+    on the shortlist. Memoized per (n_clusters, layout)."""
+    key = ("mem", cand.n_clusters, cand.layout)
+    if key in ctx.memo:
+        return ctx.memo[key]
+    wl = ctx.workload
+    f = max(int(ctx.stats.feature_len), 1)
+    mean_rows = max(ctx.stats.n_nodes, 1) / max(cand.n_clusters, 1)
+    if cand.n_clusters == 1:
+        rows, halo = mean_rows, 0.0
+    else:
+        rows = mean_rows * (4.0 / 3.0 if cand.layout == "bucketed" else 2.0)
+        halo = min(rows * min(ctx.stats.avg_cs, float(wl.sample)),
+                   float(ctx.stats.n_nodes) - mean_rows)
+        halo = max(halo, 0.0)
+    ctx.memo[key] = {"device_bytes":
+                     4.0 * (2 * rows * f + halo * f + 2 * rows * wl.sample)}
+    return ctx.memo[key]
+
+
 def traffic_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
     """Measured wire traffic on the concrete graph: bytes a full refresh
     exchanges, and bytes one policy-committed incremental tick ships (the
@@ -144,6 +180,12 @@ def traffic_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
     out = {"bytes_full_refresh":
            float(full.tier0_bytes().sum())
            + float(full.tier1_bytes().sum()) * ctx.workload.gnn_layers}
+    # measured layout accounting for the concrete partition: grounds the
+    # modeled ``device_bytes`` axis without touching it (disjoint keys —
+    # the ranking/frontier must not depend on whether measurement ran)
+    ls = plan.layout_stats()
+    out["padding_ratio"] = float(ls["padding_ratio"])
+    out["peak_device_bytes"] = float(ls["peak_device_bytes"])
     wl = ctx.workload
     if wl.mutating and plan.part is not None:
         import types
@@ -167,7 +209,7 @@ def traffic_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
     return out
 
 
-DEFAULT_EVALUATORS = (cost_evaluator, mapper_evaluator)
+DEFAULT_EVALUATORS = (cost_evaluator, mapper_evaluator, memory_evaluator)
 
 
 def evaluate(cand: Candidate, ctx: PlanContext,

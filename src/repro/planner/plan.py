@@ -11,8 +11,10 @@ chain (``evaluate.evaluate``), scores it under the requested objective
     ``result.scored[0]`` — the self-consistency contract
     ``benchmarks/planner_sweep.py`` gates on;
   * ``frontier``    — the Pareto non-dominated set over (per-inference
-    latency, per-device energy, per-tick serving cost): the configs worth
-    keeping when the objective weighting is uncertain;
+    latency, per-device energy, per-tick serving cost, modeled per-device
+    working-set bytes): the configs worth keeping when the objective
+    weighting is uncertain — the memory axis is what keeps the bucketed
+    layouts on the frontier (time/energy models cannot separate layouts);
   * ``recommended`` — the argmin under the objective, materializable via
     ``result.build_plan(graph)``.
 
@@ -33,7 +35,8 @@ import dataclasses
 from .evaluate import (DEFAULT_EVALUATORS, PlanContext, evaluate,
                        traffic_evaluator)
 from .objective import OBJECTIVES, score, tick_costs
-from .space import BACKEND_RANK, Candidate, WorkloadProfile, candidate_space
+from .space import (BACKEND_RANK, LAYOUT_RANK, Candidate, WorkloadProfile,
+                    candidate_space)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +48,7 @@ class ScoredCandidate:
     @property
     def sort_key(self) -> tuple:
         return (self.score, BACKEND_RANK.get(self.candidate.backend, 9),
+                LAYOUT_RANK.get(self.candidate.layout, 9),
                 self.candidate.key)
 
     def as_record(self) -> dict:
@@ -53,12 +57,12 @@ class ScoredCandidate:
         return dict(setting=c.setting, backend=c.backend,
                     n_clusters=c.n_clusters,
                     xbar="paper" if c.xbar_size is None else c.xbar_size,
-                    policy=c.policy, score=self.score,
+                    policy=c.policy, layout=c.layout, score=self.score,
                     **{k: v for k, v in self.metrics.items()
                        if isinstance(v, (int, float))})
 
 
-_PARETO_AXES = ("t_net", "energy_j", "t_tick")
+_PARETO_AXES = ("t_net", "energy_j", "t_tick", "device_bytes")
 
 
 def _dominates(a: dict, b: dict) -> bool:

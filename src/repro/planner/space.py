@@ -1,7 +1,8 @@
 """The planner's configuration space: candidates and workload profiles.
 
 A ``Candidate`` is one point of the discrete space the planner searches —
-``setting × backend × cluster count × crossbar size × refresh policy`` —
+``setting × backend × cluster count × crossbar size × refresh policy ×
+data-plane layout`` —
 i.e. everything that must be decided *before* an ``ExecutionPlan`` can be
 built and a ``StreamingGNNServer`` brought up. ``WorkloadProfile`` is the
 demand side: how much of the graph churns per tick, how many embedding
@@ -20,10 +21,17 @@ import math
 SETTINGS = ("centralized", "decentralized", "semi")
 BACKENDS = ("jnp", "pallas", "fused")
 POLICIES = ("eager", "interval", "bounded-staleness")
+LAYOUTS = ("dense", "bucketed")
 
 # deterministic tie-break: when two candidates score identically the planner
 # prefers the faster measured backend (fused keeps Z in VMEM — DESIGN.md §5)
 BACKEND_RANK = {"fused": 0, "pallas": 1, "jnp": 2}
+# second tie-break: bucketed before dense — the modeled time/energy
+# evaluators cannot distinguish the layouts (same partition, same math),
+# and at equal score the bucketed layout strictly reduces device memory
+# (it Pareto-dominates its dense twin on the ``device_bytes`` axis, so
+# ranking it first keeps the recommendation on the frontier)
+LAYOUT_RANK = {"bucketed": 0, "dense": 1}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,12 +45,16 @@ class Candidate:
     candidates carry a single representative cluster count for the
     concrete runtime). ``xbar_size`` re-geometries the MVM crossbars via
     ``XbarInventory.with_xbar_size`` (None = the paper's geometry).
+    ``layout`` picks the partition data plane: ``dense`` is the uniform
+    n_max padding, ``bucketed`` the capacity-bucketed ragged layout
+    (DESIGN.md §12) — numerically identical, cheaper device memory.
     """
     setting: str
     backend: str = "fused"
     n_clusters: int = 1
     xbar_size: int | None = None
     policy: str = "eager"
+    layout: str = "dense"
 
     def __post_init__(self):
         if self.setting not in SETTINGS:
@@ -51,6 +63,8 @@ class Candidate:
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.policy not in POLICIES:
             raise ValueError(f"unknown policy {self.policy!r}")
+        if self.layout not in LAYOUTS:
+            raise ValueError(f"unknown layout {self.layout!r}")
         if self.n_clusters < 1:
             raise ValueError(f"n_clusters must be >= 1, got {self.n_clusters}")
         if self.setting == "centralized" and self.n_clusters != 1:
@@ -60,16 +74,18 @@ class Candidate:
     def key(self) -> str:
         xb = "paper" if self.xbar_size is None else str(self.xbar_size)
         return (f"{self.setting}/{self.backend}/k{self.n_clusters}"
-                f"/xb{xb}/{self.policy}")
+                f"/xb{xb}/{self.policy}/{self.layout}")
 
     def build_plan(self, graph, sample: int, seed: int = 0,
                    spokes_per_head: int = 4):
         """Materialize this candidate as a runnable ``ExecutionPlan``."""
         from repro.core.partition import plan_execution
         k = None if self.setting == "centralized" else self.n_clusters
+        buckets = "auto" if self.layout == "bucketed" else None
         return plan_execution(graph, self.setting, backend=self.backend,
                               sample=sample, n_clusters=k, seed=seed,
-                              spokes_per_head=spokes_per_head)
+                              spokes_per_head=spokes_per_head,
+                              buckets=buckets)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,7 +162,8 @@ def candidate_space(stats,
                     cluster_counts: tuple = (4, 8, 16),
                     xbar_sizes: tuple = (None, 128, 256),
                     policies: tuple | None = None,
-                    workload: WorkloadProfile | None = None) -> list:
+                    workload: WorkloadProfile | None = None,
+                    layouts: tuple = LAYOUTS) -> list:
     """Enumerate the candidate grid for one workload.
 
     Per-setting structure is respected: centralized pins ``n_clusters=1``;
@@ -155,6 +172,8 @@ def candidate_space(stats,
     cluster-head counts (capped at the node count — a head must front at
     least one node). Refresh policies only differentiate mutating
     workloads, so a query-only profile collapses them to ``eager``.
+    Layouts only differentiate partitioned settings — centralized has one
+    cluster and therefore one bucket, so it stays dense.
     """
     if policies is None:
         policies = (POLICIES if workload is not None and workload.mutating
@@ -169,10 +188,12 @@ def candidate_space(stats,
             ks = (counts[len(counts) // 2],)
         else:
             ks = tuple(counts)
+        lys = ("dense",) if setting == "centralized" else tuple(layouts)
         for backend in backends:
             for k in ks:
                 for size in xbar_sizes:
                     for policy in policies:
-                        out.append(Candidate(setting, backend, k, size,
-                                             policy))
+                        for layout in lys:
+                            out.append(Candidate(setting, backend, k, size,
+                                                 policy, layout))
     return out

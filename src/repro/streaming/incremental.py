@@ -45,8 +45,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.partition import (ExecutionPlan, _from_assignment,
-                                  build_local_subgraphs)
-from repro.distributed.halo import HaloPlan, _layer_step, build_halo_plan
+                                  bucket_partition, build_bucketed_subgraphs,
+                                  build_local_subgraphs,
+                                  gather_bucketed_features)
+from repro.distributed.halo import (HaloPlan, _bucket_layer, _flat_rows,
+                                    _gather_halo, _layer_step,
+                                    build_bucketed_halo_plan,
+                                    build_halo_plan)
 from repro.distributed.traffic import (StreamingTrafficReport,
                                        measure_incremental)
 from repro.streaming.delta import DeltaResult, GraphDelta, apply_deltas
@@ -63,10 +68,30 @@ def _bucket(n: int, cap: int) -> int:
     return min(b, cap)
 
 
+def _pad_rows(rows: np.ndarray, cap: int) -> np.ndarray:
+    """Bucket-pad a dirty-row batch by repeating its first row, so the
+    scatter's shape — and hence its compiled executable — is reused across
+    ticks (pad rows recompute the same value; the duplicate scatter is
+    benign)."""
+    padded = np.full(_bucket(len(rows), cap), rows[0], np.int64)
+    padded[:len(rows)] = rows
+    return padded
+
+
 _rows_step = jax.jit(
     lambda table, nbr, wts, w, b, cfg, act:
     _layer_step(table, nbr, wts, {"w": w, "b": b}, cfg, act),
     static_argnames=("cfg", "act"))
+
+# the activation-cache patch: the cache buffer is DONATED — the scatter's
+# output aliases the input's pages, so per-tick updates mutate the
+# device-resident cache in place instead of round-tripping a fresh
+# allocation through the host every tick (DESIGN.md §12). Callers must
+# rebind (``self._acts[..] = _scatter_rows(self._acts[..], ...)``) and
+# never hold a second reference to the donated buffer.
+_scatter_rows = jax.jit(
+    lambda acts, c, rows, vals: acts.at[c, rows].set(vals),
+    donate_argnums=(0,))
 
 
 @dataclasses.dataclass
@@ -99,12 +124,25 @@ class IncrementalEngine:
         self._gnbr, self._gwts = self.graph.neighbor_sample(self.sample)
         self._halo_plan: HaloPlan | None = (
             build_halo_plan(plan.part) if plan.part is not None else None)
+        # bucketed ragged layout: values move through the bucketed flat
+        # gather; the dense _halo_plan above stays the billing source of
+        # truth for the traffic accountant (DESIGN.md §12)
+        self._bp = plan.bucketed
+        if self._bp is not None:
+            self._bind_bucketed_tables()
         self._new_send: np.ndarray | None = None  # send slots churn created
         self._acts: list | None = None            # [K, n_max, F_l] per level
+        #                                 (bucketed: per level a LIST of
+        #                                  per-bucket [K_b, n_cap, F_l])
         self.last_update: StreamingUpdate | None = None
         self.ticks = 0
 
     # ---- layout helpers -------------------------------------------------
+
+    def _bind_bucketed_tables(self) -> None:
+        self._bhalo = build_bucketed_halo_plan(self._bp)
+        self._bfidx = tuple(jnp.asarray(i) for i in self._bhalo.flat_src)
+        self._bfmask = tuple(jnp.asarray(m) for m in self._bhalo.halo_mask)
 
     @property
     def _k(self) -> int:
@@ -117,10 +155,13 @@ class IncrementalEngine:
         part = self.plan.part
         return gmask[part.local_nodes] & part.local_mask
 
-    def _owned_features(self) -> np.ndarray:
+    def _owned_features(self):
         """[K, n_max, F0] level-0 table (semi: the tier-0 assembled region
-        tables — same rows the spoke gather produces)."""
+        tables — same rows the spoke gather produces). Bucketed plans
+        return the per-bucket list instead."""
         from repro.core.partition import gather_features
+        if self._bp is not None:
+            return list(gather_bucketed_features(self.graph, self._bp))
         if self.plan.part is None:
             return self.graph.features[None].astype(np.float32)
         return gather_features(self.graph, self.plan.part)
@@ -143,9 +184,28 @@ class IncrementalEngine:
         Caches are kept device-resident (jnp) so incremental ticks patch
         dirty rows in place instead of re-uploading whole tables."""
         t0 = time.perf_counter()
+        nbr, wts = self.plan.neighbors, self.plan.weights
+        if self._bp is not None:
+            xs = [jnp.asarray(f) for f in self._owned_features()]
+            acts = [xs]
+            nb = self._bp.n_buckets
+            for l in range(self.n_layers):
+                layer = self.params[l]
+                act = l < self.n_layers - 1 or self.cfg.final_activation
+                flat = _flat_rows(*acts[l])
+                acts.append([
+                    _bucket_layer(acts[l][b],
+                                  _gather_halo(flat, self._bfidx[b],
+                                               self._bfmask[b]),
+                                  jnp.asarray(nbr[b]), jnp.asarray(wts[b]),
+                                  layer["w"], layer["b"], cfg=self.cfg,
+                                  act=act)
+                    for b in range(nb)])
+            jax.block_until_ready(acts[-1])
+            self._acts = acts
+            return time.perf_counter() - t0
         x = jnp.asarray(self._owned_features())
         acts = [x]
-        nbr, wts = self.plan.neighbors, self.plan.weights
         for l in range(self.n_layers):
             layer = self.params[l]
             act = l < self.n_layers - 1 or self.cfg.final_activation
@@ -177,6 +237,17 @@ class IncrementalEngine:
         plan.graph = g
         if plan.part is None:
             plan.feats = g.features[None]                # view, O(1)
+            return
+        if plan.bucketed is not None and plan.setting != "semi":
+            bp = plan.bucketed
+            if dirty0_local is None:
+                plan.feats = gather_bucketed_features(g, bp)
+                return
+            for c in range(self._k):
+                rows = np.nonzero(dirty0_local[c])[0]
+                if len(rows):
+                    plan.feats[bp.bucket_of[c]][bp.index_in[c], rows] = \
+                        g.features[plan.part.local_nodes[c][rows]]
             return
         if plan.setting == "semi":
             hier = plan.hier
@@ -217,15 +288,29 @@ class IncrementalEngine:
             return
         part = _from_assignment(g, plan.part.assignment, self._k,
                                 sample=self.sample)
-        sub = build_local_subgraphs(g, part, self.sample)
         old = self._halo_plan
         new = build_halo_plan(part)
         self._new_send = _new_send_slots(old, new)
         self._halo_plan = new
         plan.part = part
-        plan.sub = sub
-        plan.neighbors = sub.neighbors
-        plan.weights = sub.weights
+        if self._bp is not None:
+            # re-bucket with the previous grouping and never-shrinking caps
+            # (same assignment => same cluster sizes => same groups), so
+            # the cached activations keep their shapes and only the
+            # halo/neighbor tables retrace — and only when a cap grew
+            bp = bucket_partition(part, g, self.sample, like=self._bp)
+            nbrs, wtss = build_bucketed_subgraphs(g, bp)
+            self._bp = bp
+            plan.bucketed = bp
+            self._bind_bucketed_tables()
+            plan.sub = None
+            plan.neighbors = nbrs
+            plan.weights = wtss
+        else:
+            sub = build_local_subgraphs(g, part, self.sample)
+            plan.sub = sub
+            plan.neighbors = sub.neighbors
+            plan.weights = sub.weights
         if plan.hier is not None:
             plan.hier = dataclasses.replace(plan.hier, region=part)
 
@@ -272,14 +357,33 @@ class IncrementalEngine:
                 rows = np.nonzero(dirty_locals[0][c])[0]
                 if not len(rows):
                     continue
-                # bucket-pad (repeat a dirty row) so the scatter's shape —
-                # and hence its compiled executable — is reused across ticks
-                padded = np.full(_bucket(len(rows), dirty_locals.shape[2]),
-                                 rows[0], np.int64)
-                padded[:len(rows)] = rows
+                padded = _pad_rows(rows, dirty_locals.shape[2])
                 ids = padded if part is None else part.local_nodes[c][padded]
-                self._acts[0] = self._acts[0].at[c, padded].set(
-                    jnp.asarray(self.graph.features[ids]))
+                vals = jnp.asarray(self.graph.features[ids])
+                if self._bp is not None:
+                    b, j = int(self._bp.bucket_of[c]), \
+                        int(self._bp.index_in[c])
+                    self._acts[0][b] = _scatter_rows(
+                        self._acts[0][b], j, jnp.asarray(padded), vals)
+                else:
+                    self._acts[0] = _scatter_rows(
+                        self._acts[0], c, jnp.asarray(padded), vals)
+        if self._bp is not None:
+            self._refresh_dirty_bucketed(dirty_locals, l_total)
+        else:
+            self._refresh_dirty_dense(dirty_locals, l_total)
+        jax.block_until_ready(self._acts[-1])
+        traffic = None
+        if self._halo_plan is not None:
+            traffic = measure_incremental(
+                self.plan, self._halo_plan, dirty_locals, self.cfg,
+                mode=self.mode, new_send=self._new_send)
+        self._new_send = None
+        return StreamingUpdate(fr, traffic, time.perf_counter() - t0,
+                               full=False)
+
+    def _refresh_dirty_dense(self, dirty_locals: np.ndarray,
+                             l_total: int) -> None:
         nbr, wts = self.plan.neighbors, self.plan.weights
         n_max = dirty_locals.shape[2]
         for l in range(l_total):
@@ -293,11 +397,7 @@ class IncrementalEngine:
                 rows = np.nonzero(d[c])[0]
                 if not len(rows):
                     continue
-                # bucket-pad with a repeated dirty row: the pad rows compute
-                # the same value, so the duplicate scatter below is benign
-                b = _bucket(len(rows), d.shape[1])
-                padded = np.full(b, rows[0], np.int64)
-                padded[:len(rows)] = rows
+                padded = _pad_rows(rows, d.shape[1])
                 sub_nbr, sub_wts = nbr[c][padded], wts[c][padded]
                 table = self._acts[l][c]
                 if hp is not None and (sub_nbr >= n_max).any():
@@ -309,16 +409,45 @@ class IncrementalEngine:
                 out = _rows_step(table, jnp.asarray(sub_nbr),
                                  jnp.asarray(sub_wts),
                                  layer["w"], layer["b"], self.cfg, act)
-                self._acts[l + 1] = self._acts[l + 1].at[c, padded].set(out)
-        jax.block_until_ready(self._acts[-1])
-        traffic = None
-        if self._halo_plan is not None:
-            traffic = measure_incremental(
-                self.plan, self._halo_plan, dirty_locals, self.cfg,
-                mode=self.mode, new_send=self._new_send)
-        self._new_send = None
-        return StreamingUpdate(fr, traffic, time.perf_counter() - t0,
-                               full=False)
+                self._acts[l + 1] = _scatter_rows(
+                    self._acts[l + 1], c, jnp.asarray(padded), out)
+
+    def _refresh_dirty_bucketed(self, dirty_locals: np.ndarray,
+                                l_total: int) -> None:
+        """Per-bucket dirty-row patch: same dirty-row indices as the dense
+        layout (owned rows are the members prefix in both), halo values via
+        the bucketed flat gather, caches patched with the donated scatter."""
+        bp = self._bp
+        nbrs, wtss = self.plan.neighbors, self.plan.weights
+        for l in range(l_total):
+            layer = self.params[l]
+            act = l < l_total - 1 or self.cfg.final_activation
+            d = dirty_locals[l + 1]
+            if not d.any():
+                continue
+            flat = None
+            for c in range(self._k):
+                rows = np.nonzero(d[c])[0]
+                if not len(rows):
+                    continue
+                b, j = int(bp.bucket_of[c]), int(bp.index_in[c])
+                padded = _pad_rows(rows, bp.n_caps[b])
+                sub_nbr = nbrs[b][j][padded]
+                sub_wts = wtss[b][j][padded]
+                table = self._acts[l][b][j]
+                if (sub_nbr >= bp.n_caps[b]).any():
+                    # only pay the flat build + halo gather when a dirty
+                    # row actually reads a halo slot this layer
+                    if flat is None:
+                        flat = _flat_rows(*self._acts[l])
+                    halo = _gather_halo(flat, self._bfidx[b][j],
+                                        self._bfmask[b][j])
+                    table = jnp.concatenate([table, halo], axis=0)
+                out = _rows_step(table, jnp.asarray(sub_nbr),
+                                 jnp.asarray(sub_wts),
+                                 layer["w"], layer["b"], self.cfg, act)
+                self._acts[l + 1][b] = _scatter_rows(
+                    self._acts[l + 1][b], j, jnp.asarray(padded), out)
 
     def commit_full(self, delta: GraphDelta | None = None) -> StreamingUpdate:
         """Apply a buffer (optional) and rebuild every cache level — the

@@ -21,7 +21,8 @@ from . import registry
 from .cache import TuneCache
 from .measure import measure as _real_measure
 from .prune import prune
-from .space import FusedGeometry, TunedKernels, default_config
+from .space import (AggregateGeometry, FusedGeometry, TunedKernels,
+                    default_config)
 
 
 def current_platform() -> str:
@@ -82,22 +83,37 @@ def tune(geom, *, cache: TuneCache | None = None, hw: HW = V5E,
 def plan_geometries(plan, cfg) -> list:
     """Per-layer kernel geometries an ExecutionPlan's forward launches.
 
-    Only the ``fused`` backend launches tunable Pallas kernels on the
-    serving path (``jnp`` is the XLA oracle; composed ``pallas`` runs the
-    aggregation kernel + the jnp crossbar oracle), so other backends tune
-    nothing — an empty bundle, not an error.
+    ``fused`` launches the fused GNN-layer kernel, composed ``pallas``
+    launches the standalone aggregation kernel (its crossbar stage is the
+    jnp oracle); ``jnp`` is pure XLA, so it tunes nothing — an empty
+    bundle, not an error. Bucketed plans launch one kernel shape per
+    capacity bucket, so every distinct (rows, table, width) triple gets
+    its own geometry.
     """
-    if cfg.backend != "fused":
+    if cfg.backend not in ("fused", "pallas"):
         return []
-    nd = int(plan.neighbors.shape[-2])
-    # gather table rows: owned + halo rows on distributed settings
-    n = nd + (int(plan.part.h_max) if plan.part is not None else 0)
+    if getattr(plan, "bucketed", None) is not None:
+        bp = plan.bucketed
+        shapes = sorted({(bp.n_caps[b], bp.n_caps[b] + bp.h_caps[b],
+                          bp.s_caps[b]) for b in range(bp.n_buckets)})
+    else:
+        nd = int(plan.neighbors.shape[-2])
+        # gather table rows: owned + halo rows on distributed settings
+        n = nd + (int(plan.part.h_max) if plan.part is not None else 0)
+        shapes = [(nd, n, int(plan.sample))]
     dims = cfg.dims
-    return [FusedGeometry(nd=nd, n=n, f_in=int(f_in), f_out=int(f_out),
-                          sample=int(plan.sample),
-                          ideal=bool(cfg.numerics.ideal),
-                          rows_per_xbar=int(cfg.numerics.rows_per_xbar))
-            for f_in, f_out in zip(dims[:-1], dims[1:])]
+    geoms = []
+    for nd, n, s in shapes:
+        for f_in, f_out in zip(dims[:-1], dims[1:]):
+            if cfg.backend == "fused":
+                geoms.append(FusedGeometry(
+                    nd=int(nd), n=int(n), f_in=int(f_in), f_out=int(f_out),
+                    sample=int(s), ideal=bool(cfg.numerics.ideal),
+                    rows_per_xbar=int(cfg.numerics.rows_per_xbar)))
+            else:
+                geoms.append(AggregateGeometry(
+                    nd=int(nd), n=int(n), f=int(f_in), sample=int(s)))
+    return geoms
 
 
 def tune_plan(plan, cfg, *, cache: TuneCache | None = None,

@@ -17,8 +17,8 @@ import time
 
 import numpy as np
 
-from .space import CrossbarConfig, CrossbarGeometry, FusedConfig, \
-    FusedGeometry
+from .space import AggregateConfig, AggregateGeometry, CrossbarConfig, \
+    CrossbarGeometry, FusedConfig, FusedGeometry
 
 
 def time_callable(fn, iters: int = 3, warmup: int = 1) -> float:
@@ -86,9 +86,30 @@ def fused_runner(geom: FusedGeometry, config: FusedConfig, seed: int = 0,
     return run
 
 
+def aggregate_runner(geom: AggregateGeometry, config: AggregateConfig,
+                     seed: int = 0, interpret: bool | None = None):
+    """() -> z for one standalone aggregation launch at ``config``."""
+    import jax.numpy as jnp
+    from repro.kernels.csr_aggregate import aggregate
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(geom.n, geom.f)).astype(np.float32))
+    nbr = jnp.asarray(rng.integers(
+        0, geom.n, size=(geom.nd, geom.sample)).astype(np.int32))
+    wts = jnp.asarray(np.abs(rng.normal(
+        size=(geom.nd, geom.sample))).astype(np.float32))
+
+    def run():
+        return aggregate(x, nbr, wts, backend="pallas", bf=config.bf,
+                         interpret=interpret)
+    return run
+
+
 def make_runner(geom, config, seed: int = 0, interpret: bool | None = None):
     if geom.kernel == "fused_layer":
         return fused_runner(geom, config, seed, interpret)
+    if geom.kernel == "csr_aggregate":
+        return aggregate_runner(geom, config, seed, interpret)
     return crossbar_runner(geom, config, seed, interpret)
 
 

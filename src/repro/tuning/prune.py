@@ -26,7 +26,8 @@ import math
 
 from repro.analysis.roofline import HW, V5E, roofline_terms
 
-from .space import CrossbarGeometry, FusedGeometry, candidates
+from .space import (AggregateGeometry, CrossbarGeometry, FusedGeometry,
+                    candidates)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,9 +89,26 @@ def fused_cost(geom: FusedGeometry, c) -> LaunchCost:
     return LaunchCost(flops, hbm, vmem, steps)
 
 
+def aggregate_cost(geom: AggregateGeometry, c) -> LaunchCost:
+    """Cost of one standalone ``csr_aggregate`` launch at feature block bf.
+
+    The grid is (nd, F/bf, sample): each step gathers one bf-wide slice of
+    a neighbor row and accumulates it into the VMEM-resident out block
+    (written back once per (nd, F/bf) pair).
+    """
+    f_pad = _ceil_to(geom.f, c.bf)
+    steps = geom.nd * (f_pad // c.bf) * max(geom.sample, 1)
+    flops = 2.0 * steps * c.bf                   # multiply-accumulate
+    hbm = 4.0 * (steps * c.bf + geom.nd * f_pad)
+    vmem = 4.0 * (2 * c.bf) * 2                  # gathered slice + out block
+    return LaunchCost(flops, hbm, vmem, steps)
+
+
 def launch_cost(geom, config) -> LaunchCost:
     if geom.kernel == "fused_layer":
         return fused_cost(geom, config)
+    if geom.kernel == "csr_aggregate":
+        return aggregate_cost(geom, config)
     return crossbar_cost(geom, config)
 
 

@@ -12,6 +12,10 @@ tunable space:
     bit-identical at any depth — see kernels/crossbar_mvm).
   * ``fused_layer`` — ``(bf,)``: the lane-alignment block the ops layer
     pads F/H to (zero padding; bit-identical at any bf).
+  * ``csr_aggregate`` — ``(bf,)``: the feature block of the standalone
+    aggregation kernel the composed ``pallas`` backend launches (zero
+    padding of F; the S-axis accumulation order never changes, so every
+    candidate is bit-identical).
 
 Candidate enumeration is deterministic and divisibility-aware; the
 roofline pruning and measurement live in ``prune.py`` / ``autotune.py``.
@@ -61,7 +65,17 @@ class FusedConfig:
         return {"bf": self.bf}
 
 
-CONFIG_TYPES = {"crossbar_mvm": CrossbarConfig, "fused_layer": FusedConfig}
+@dataclasses.dataclass(frozen=True, order=True)
+class AggregateConfig:
+    """One tunable point for the standalone ``csr_aggregate`` kernel."""
+    bf: int = DEFAULT_BF          # feature block per grid step
+
+    def as_dict(self) -> dict:
+        return {"bf": self.bf}
+
+
+CONFIG_TYPES = {"crossbar_mvm": CrossbarConfig, "fused_layer": FusedConfig,
+                "csr_aggregate": AggregateConfig}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +132,27 @@ class FusedGeometry:
                 "rows_per_xbar": self.rows_per_xbar}
 
 
+@dataclasses.dataclass(frozen=True)
+class AggregateGeometry:
+    """Static signature of one standalone ``aggregate`` launch.
+
+    ``n`` is the feature-table row count (owned + halo), ``nd`` the
+    destination rows, ``f`` the feature width the grid tiles by ``bf``."""
+    nd: int
+    n: int
+    f: int
+    sample: int
+
+    kernel = "csr_aggregate"
+
+    def key(self) -> tuple:
+        return (self.kernel, self.nd, self.n, self.f, self.sample)
+
+    def as_dict(self) -> dict:
+        return {"kernel": self.kernel, "nd": self.nd, "n": self.n,
+                "f": self.f, "sample": self.sample}
+
+
 def default_config(geom):
     return CONFIG_TYPES[geom.kernel]()
 
@@ -128,10 +163,12 @@ def candidates(geom) -> list:
     crossbar_mvm: any (bm, bn) is legal (the ops layer pads M/N to the
     block multiples), but ``depth`` must divide the physical crossbar
     count ``n_k`` — the wrapper only pads K to ``rows_per_xbar``.
-    fused_layer: any bf is legal (zero padding of F/H).
+    fused_layer / csr_aggregate: any bf is legal (zero padding of F/H).
     """
     if geom.kernel == "fused_layer":
         cands = [FusedConfig(bf) for bf in BF_CANDIDATES]
+    elif geom.kernel == "csr_aggregate":
+        cands = [AggregateConfig(bf) for bf in BF_CANDIDATES]
     else:
         cands = [CrossbarConfig(bm, bn, d)
                  for bm in BM_CANDIDATES

@@ -1,0 +1,222 @@
+"""Capacity-bucketed ragged data plane (DESIGN.md §12).
+
+The contract under test: bucketing is a *layout* change, never a numerics
+change. A bucketed plan's forward must equal the dense plan's bit for bit
+on every setting × backend, under both halo-exchange schedules
+(overlapped and serialized), and through the streaming engine's
+incremental refresh. The property backbone drives heavily skewed
+power-law partitions (the layout's reason to exist) through
+``partition``/``hier_partition``/``build_local_subgraphs`` and checks the
+structural invariants: every cluster lands in exactly one bucket, every
+bucket capacity covers its clusters, and re-bucketing with ``like=``
+never shrinks a capacity (jit shape stability across streaming rebuilds).
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core import gnn
+from repro.core.graph import random_graph
+from repro.core.partition import (PARTITION_METHODS, bucket_partition,
+                                  build_local_subgraphs, hier_partition,
+                                  partition, plan_execution)
+
+
+def _forward_scattered(g, cfg, params, setting, backend, buckets,
+                       **plan_kw):
+    plan = plan_execution(g, setting, backend=backend, sample=cfg.sample,
+                          n_clusters=None if setting == "centralized"
+                          else 4, seed=2, buckets=buckets, **plan_kw)
+    return plan, plan.scatter(plan.make_forward(cfg)(params))
+
+
+# ------------------------------------------------- forward parity grid
+
+def test_bucketed_equals_dense_exactly(setting_backend, make_graph):
+    """Bit-for-bit: dense [K, n_max] padding vs per-bucket [K_b, n_cap]
+    ragged layout, full 3-setting x 3-backend grid."""
+    import jax
+    setting, backend = setting_backend
+    g = make_graph(n=50, e=260, f=8, seed=3)
+    cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(10,), out_dim=4, sample=5,
+                        backend=backend)
+    params = gnn.init_params(jax.random.key(1), cfg)
+    _, ref = _forward_scattered(g, cfg, params, setting, backend, None)
+    plan, out = _forward_scattered(g, cfg, params, setting, backend, "auto")
+    assert plan.bucketed is not None and plan.bucketed.covers()
+    assert np.array_equal(ref, out), \
+        f"{setting}/{backend}: maxdiff {np.abs(ref - out).max()}"
+
+
+def test_overlap_and_serial_schedules_identical(make_graph):
+    """The double-buffered (overlap) and serialized halo schedules are the
+    same dataflow in a different dispatch order — identical outputs."""
+    import jax
+    g = make_graph(n=60, e=320, f=8, seed=4)
+    cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(12,), out_dim=4, sample=6)
+    params = gnn.init_params(jax.random.key(0), cfg)
+    for setting in ("decentralized", "semi"):
+        plan = plan_execution(g, setting, backend="jnp", sample=6,
+                              n_clusters=4, seed=1, buckets="auto")
+        a = plan.make_forward(cfg, overlap="overlap")(params)
+        b = plan.make_forward(cfg, overlap="serial")(params)
+        for x, y in zip(a, b):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), setting
+
+
+# --------------------------------------------- skewed-partition properties
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([30, 70, 120]),
+       k=st.integers(2, 8), method=st.sampled_from(PARTITION_METHODS),
+       max_buckets=st.sampled_from([0, 1, 2, 3]))
+def test_property_buckets_cover_every_skewed_cluster(seed, n, k, method,
+                                                     max_buckets):
+    """Power-law graphs through every partition heuristic: the bucketed
+    layout must place each cluster in exactly one bucket whose capacities
+    cover the cluster's rows, halo, and sampled slots — including under a
+    forced bucket-count cap (merging never drops a cluster)."""
+    g = random_graph(n, 5 * n, 6, seed=seed % 9973).gcn_normalize()
+    part = partition(g, min(k, n), seed=seed % 17, sample=4, method=method)
+    bp = bucket_partition(part, g, sample=4, max_buckets=max_buckets)
+    assert bp.covers()
+    if max_buckets:
+        assert bp.n_buckets <= max_buckets
+    sizes = part.local_mask.sum(axis=1)
+    seen = np.zeros(part.n_clusters, int)
+    for b, cl in enumerate(bp.clusters):
+        seen[cl] += 1
+        assert bp.n_caps[b] >= int(sizes[cl].max())
+        assert bp.s_caps[b] >= 1
+        for c in cl.tolist():
+            assert bp.bucket_of[c] == b
+    assert (seen == 1).all()                    # a partition of the clusters
+    assert bp.padded_rows() >= int(sizes.sum())
+    # pow2 capacities at most double any cluster's dense rows (plus the
+    # _MIN_CAP floor) — bucketed only *wins* on skewed partitions, but it
+    # can never blow past this bound on balanced ones
+    assert bp.padded_rows() <= 2 * bp.dense_padded_rows() \
+        + 8 * part.n_clusters
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([40, 90]),
+       method=st.sampled_from(PARTITION_METHODS))
+def test_property_bucketed_forward_equals_dense_on_skew(seed, n, method):
+    """Numerical identity holds for arbitrary skewed partitions, not just
+    the well-balanced BFS default the parity grid uses."""
+    import jax
+    g = random_graph(n, 6 * n, 6, seed=seed % 7919).gcn_normalize()
+    cfg = gnn.GNNConfig(in_dim=6, hidden_dims=(8,), out_dim=3, sample=4)
+    params = gnn.init_params(jax.random.key(seed % 13), cfg)
+    _, ref = _forward_scattered(g, cfg, params, "decentralized", "jnp",
+                                None, partition_method=method)
+    plan, out = _forward_scattered(g, cfg, params, "decentralized", "jnp",
+                                   "auto", partition_method=method)
+    assert plan.bucketed is not None
+    assert np.array_equal(ref, out), f"method={method}"
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), heads=st.integers(2, 6))
+def test_property_hier_partition_buckets_cover_heads(seed, heads):
+    """Semi's tier-1 head partition buckets the same way: the head-level
+    clusters of a skewed two-tier hierarchy are covered, and the dense
+    spoke tables feeding them stay consistent (build_local_subgraphs on
+    the head partition still works off the same partition object)."""
+    g = random_graph(80, 400, 6, seed=seed % 4999).gcn_normalize()
+    hier = hier_partition(g, heads, seed=seed % 23, sample=4)
+    bp = bucket_partition(hier.region, g, sample=4)
+    assert bp.covers()
+    sub = build_local_subgraphs(g, hier.region, 4)
+    sizes = hier.region.local_mask.sum(axis=1)
+    for b, cl in enumerate(bp.clusters):
+        assert bp.n_caps[b] >= int(sizes[cl].max())
+        assert bp.s_caps[b] <= sub.neighbors.shape[-1]
+
+
+def test_rebucket_like_keeps_groups_and_never_shrinks(make_graph):
+    """Streaming rebuilds re-bucket with ``like=``: same cluster grouping,
+    capacities only ever grow (jit shape stability across ticks)."""
+    g = make_graph(n=60, e=300, f=8, seed=6)
+    part = partition(g, 4, seed=0, sample=5, method="edge")
+    bp0 = bucket_partition(part, g, sample=5)
+    bp1 = bucket_partition(part, g, sample=5, like=bp0)
+    assert [c.tolist() for c in bp1.clusters] == \
+        [c.tolist() for c in bp0.clusters]
+    for b in range(bp0.n_buckets):
+        assert bp1.n_caps[b] >= bp0.n_caps[b]
+        assert bp1.h_caps[b] >= bp0.h_caps[b]
+        assert bp1.s_caps[b] >= bp0.s_caps[b]
+
+
+def test_partition_method_dispatch(make_graph):
+    g = make_graph(n=40, e=200, f=6, seed=2)
+    for method in PARTITION_METHODS:
+        part = partition(g, 4, seed=0, sample=4, method=method)
+        assert part.n_clusters == 4
+        # every node owned exactly once
+        owned = np.sort(part.local_nodes[part.local_mask])
+        assert np.array_equal(owned, np.arange(g.n_nodes))
+    with pytest.raises(ValueError, match="method"):
+        partition(g, 4, method="metis")
+
+
+def test_layout_stats_report_bucketing_win_on_skew():
+    """On a power-law graph with an edge-balanced partition the bucketed
+    layout must waste strictly less padding than dense, and the stats
+    must price both from the same partition."""
+    g = random_graph(4000, 16000, 8, seed=0).gcn_normalize()
+    cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(8,), out_dim=4, sample=6)
+    plan = plan_execution(g, "decentralized", backend="jnp", sample=6,
+                          n_clusters=16, seed=0, buckets="auto",
+                          partition_method="edge")
+    ls = plan.layout_stats(cfg)
+    assert ls["layout"] == "bucketed"
+    assert ls["real_rows"] == g.n_nodes
+    assert ls["padded_rows"] < ls["dense_padded_rows"]
+    assert ls["padding_ratio"] < ls["dense_padding_ratio"]
+    assert ls["peak_device_bytes"] > 0
+    # the tentpole gate at test scale: bucketed waste well under dense
+    waste = ls["padding_ratio"] - 1.0
+    dense_waste = ls["dense_padding_ratio"] - 1.0
+    assert waste <= 0.5 * dense_waste
+
+
+# ------------------------------------------------- streaming incremental
+
+@pytest.mark.parametrize("backend", ["jnp", "fused"])
+def test_bucketed_streaming_refresh_matches_dense(setting, backend):
+    """Dense and bucketed IncrementalEngines fed identical churn commit to
+    the same embeddings — the bucketed dirty-refresh path (per-cluster
+    row scatter into donated per-bucket activation caches) is exercised
+    through feature and structural deltas."""
+    import jax
+    from repro.streaming import GraphDelta
+    from repro.streaming.incremental import IncrementalEngine
+
+    g = random_graph(50, 240, 8, seed=5).gcn_normalize()
+    cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(10,), out_dim=4, sample=5,
+                        backend=backend)
+    params = gnn.init_params(jax.random.key(1), cfg)
+    engines = {}
+    for name, buckets in (("dense", None), ("bucketed", "auto")):
+        plan = plan_execution(g, setting, backend=backend, sample=5,
+                              n_clusters=4, seed=2, buckets=buckets)
+        eng = IncrementalEngine(plan, cfg, params)
+        eng.full_refresh()
+        engines[name] = eng
+    rng = np.random.default_rng(0)
+    for tick in range(3):
+        ids = rng.choice(50, 5, replace=False)
+        rows = rng.normal(size=(5, 8)).astype(np.float32)
+        u, v = int(rng.integers(0, 50)), int(rng.integers(0, 50))
+        for eng in engines.values():
+            d = GraphDelta(50)
+            d.update_features(ids, rows)
+            d.add_edges([u], [v], [0.5])
+            eng.apply_delta(d)
+        a = engines["dense"].embeddings()
+        b = engines["bucketed"].embeddings()
+        np.testing.assert_allclose(a, b, atol=1e-5,
+                                   err_msg=f"tick {tick}")

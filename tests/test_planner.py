@@ -157,7 +157,9 @@ def test_concrete_graph_refinement_and_build(make_graph):
     assert ep.setting == rec.candidate.setting
     cfg = gnn.GNNConfig(in_dim=8, hidden_dims=(8,), out_dim=4, sample=4)
     params = gnn.init_params(jax.random.key(0), cfg)
-    out = ep.scatter(np.asarray(ep.make_forward(cfg)(params)))
+    # no np.asarray: a bucketed recommendation's forward returns a ragged
+    # tuple of per-bucket arrays — scatter handles both forms
+    out = ep.scatter(ep.make_forward(cfg)(params))
     assert out.shape == (g.n_nodes, 4) and np.isfinite(out).all()
 
 

@@ -13,8 +13,9 @@ Contracts under test:
 import numpy as np
 import pytest
 
-from repro.tuning import (CrossbarConfig, CrossbarGeometry, FusedConfig,
-                          FusedGeometry, TuneCache, TunedKernels, candidates,
+from repro.tuning import (AggregateConfig, AggregateGeometry, CrossbarConfig,
+                          CrossbarGeometry, FusedConfig, FusedGeometry,
+                          TuneCache, TunedKernels, candidates,
                           current_platform, default_config, launch_cost,
                           prune, registry, tune)
 
@@ -202,6 +203,27 @@ def test_crossbar_kernel_bit_identical_across_depth_and_blocks():
         assert np.array_equal(ref, got), (bm, bn, depth)
 
 
+def test_aggregate_kernel_bit_identical_across_bf():
+    """The pallas csr_aggregate at any tuned feature-block width equals
+    the default launch bit for bit — bf only moves zero padding, the
+    per-slot accumulation order is unchanged."""
+    from repro.kernels.csr_aggregate import aggregate
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(40, 24)).astype(np.float32)
+    nbr = rng.integers(0, 40, size=(40, 6)).astype(np.int32)
+    wts = np.abs(rng.normal(size=(40, 6))).astype(np.float32)
+    ref = np.asarray(aggregate(x, nbr, wts, backend="pallas"))
+    for bf in (8, 16, 64, 256):
+        got = np.asarray(aggregate(x, nbr, wts, backend="pallas", bf=bf))
+        assert np.array_equal(ref, got), bf
+    # and through GNNConfig.tuned (the jit-threaded resolution path)
+    geom = AggregateGeometry(nd=40, n=40, f=24, sample=6)
+    tuned = TunedKernels.of({geom.key(): AggregateConfig(16)})
+    got = np.asarray(aggregate(x, nbr, wts, backend="pallas", tuned=tuned))
+    assert np.array_equal(ref, got)
+
+
 def test_crossbar_depth_must_divide_crossbar_count():
     import jax.numpy as jnp
     from repro.kernels.crossbar_mvm import CrossbarNumerics
@@ -263,14 +285,38 @@ def test_execution_plan_tune_kernels_end_to_end(tmp_path, make_graph):
     assert np.array_equal(out_tuned, out_plain)
 
 
-def test_plan_geometries_empty_on_composed_backends(make_graph):
+def test_plan_geometries_per_backend(make_graph):
+    from repro.core import gnn
+    from repro.core.partition import plan_execution
+    from repro.tuning import AggregateGeometry, plan_geometries
+
+    g = make_graph(n=20, e=80, f=6, seed=0)
+    cfg = gnn.GNNConfig(in_dim=6, hidden_dims=(8,), out_dim=4, sample=4)
+    # jnp is pure XLA: nothing tunable
+    plan = plan_execution(g, "centralized", backend="jnp", sample=4)
+    assert plan_geometries(plan, plan.gnn_config(cfg)) == []
+    assert len(plan.tune_kernels(cfg)) == 0
+    # composed pallas launches the standalone aggregation kernel per layer
+    plan = plan_execution(g, "centralized", backend="pallas", sample=4)
+    geoms = plan_geometries(plan, plan.gnn_config(cfg))
+    assert len(geoms) == len(cfg.dims) - 1
+    assert all(isinstance(gm, AggregateGeometry) for gm in geoms)
+    assert [gm.f for gm in geoms] == [6, 8]
+    assert all(gm.nd == g.n_nodes and gm.sample == 4 for gm in geoms)
+
+
+def test_plan_geometries_bucketed_one_shape_per_bucket(make_graph):
     from repro.core import gnn
     from repro.core.partition import plan_execution
     from repro.tuning import plan_geometries
 
-    g = make_graph(n=20, e=80, f=6, seed=0)
-    for backend in ("jnp", "pallas"):
-        plan = plan_execution(g, "centralized", backend=backend, sample=4)
-        cfg = gnn.GNNConfig(in_dim=6, hidden_dims=(8,), out_dim=4, sample=4)
-        assert plan_geometries(plan, plan.gnn_config(cfg)) == []
-        assert len(plan.tune_kernels(cfg)) == 0
+    g = make_graph(n=40, e=200, f=6, seed=1)
+    cfg = gnn.GNNConfig(in_dim=6, hidden_dims=(8,), out_dim=4, sample=4)
+    plan = plan_execution(g, "decentralized", backend="fused", sample=4,
+                          n_clusters=4, buckets="auto")
+    geoms = plan_geometries(plan, plan.gnn_config(cfg))
+    bp = plan.bucketed
+    shapes = {(bp.n_caps[b], bp.n_caps[b] + bp.h_caps[b], bp.s_caps[b])
+              for b in range(bp.n_buckets)}
+    assert len(geoms) == len(shapes) * (len(cfg.dims) - 1)
+    assert {(gm.nd, gm.n, gm.sample) for gm in geoms} == shapes
