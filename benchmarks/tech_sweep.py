@@ -1,0 +1,261 @@
+"""Device-technology sweep: cost scaling, variation bounds, calibration.
+
+For technology {sot-mram, reram, sram, fefet} x setting {centralized,
+decentralized, semi} x the Table-2 datasets (+ taxi), compile the
+workload with ``compile_mapping(technology=...)`` (DESIGN.md §13) and
+report:
+
+  * **T_der / E_der** — technology-scaled derived latency and energy next
+    to the SOT-MRAM anchor's. At the anchor the scaling is *exact
+    identity* (the paper's Table-1 fixed point survives bit-for-bit), and
+    on taxi at the paper geometry the anchor rows must still match the
+    calibrated ``costmodel.predict`` within 10% — the mapper_sweep
+    contract, re-asserted here because the technology pass rides on the
+    same primitives.
+  * **MC bounds** — Monte-Carlo mean/p99 relative MVM output error per
+    technology (``devices.mvm_error_bounds``), next to the closed-form
+    ``modeled_p99_error`` the planner's accuracy evaluator prices with.
+    Noise draws are grid-quantized (exactly representable partial sums),
+    so the bounds are a pure function of (technology, seed) — fully
+    deterministic METRICS. ``--smoke`` asserts the errors are monotone in
+    each technology's ``noise_sigma``.
+  * **Planner frontier** — the taxi mixed churn+query workload planned
+    over all four technologies *plus* the per-tier ``reram+sram`` pair
+    (ReRAM spokes, SRAM heads); ``--smoke`` asserts a mixed-technology
+    semi candidate survives on the Pareto frontier.
+  * **Calibration** — ``devices.calibrate()`` measures the per-pass
+    primitives on this host and writes the platform-stamped artifact CI
+    uploads; measured wall-clocks (and the calibration-anchored derived
+    latency they imply) live under ``timing`` keys — the runner's
+    determinism convention quarantines them.
+
+Usage:
+  PYTHONPATH=src python benchmarks/tech_sweep.py            # full sweep
+  PYTHONPATH=src python benchmarks/tech_sweep.py --smoke    # CI gate
+  (--csv for machine-readable rows, --no-calibrate to skip the measured
+  calibration pass)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import costmodel  # noqa: E402
+from repro.core.graph import TABLE2_DATASETS, TAXI_STATS  # noqa: E402
+from repro.devices import (calibrate, load_calibration,  # noqa: E402
+                           modeled_p99_error, mvm_error_bounds,
+                           resolve_technology)
+from repro.mapper.compile import compile_mapping  # noqa: E402
+from repro.planner import WorkloadProfile, plan  # noqa: E402
+
+TECHNOLOGIES = ("sot-mram", "reram", "sram", "fefet")
+SETTINGS = ("centralized", "decentralized", "semi")
+# the per-tier pair the planner sweep adds on top: dense/cheap ReRAM
+# spokes storing the partition, fast SRAM heads running the passes
+PAIR = ("reram", "sram")
+SMOKE_ARGV = ["--smoke"]
+METRICS: dict = {}              # filled by main(); run.py --json-out reads it
+
+# the mixed serving workload the planner gate uses (planner_sweep's MIXED)
+MIXED = WorkloadProfile(churn=0.01, queries_per_tick=64, sample=8)
+
+
+def run_case(name: str, stats, setting: str, tech: str,
+             layer_dims=(0, 128), n_clusters: int = 16) -> dict:
+    """One (dataset, setting, technology) compile; anchor-relative ratios."""
+    hw = costmodel.DEFAULT_HW
+    dims = (max(stats.feature_len, 1), *layer_dims[1:])
+    cal = costmodel.predict(setting, stats, hw, n_clusters=n_clusters)
+    anchor = compile_mapping(dims, stats, hw, None, setting, n_clusters)
+    m = (anchor if tech == anchor.technology
+         else compile_mapping(dims, stats, hw, None, setting, n_clusters,
+                              technology=tech))
+    return dict(
+        dataset=name, setting=setting, technology=tech,
+        t_cal=cal.t_compute, t_der=m.t_compute, e_der=m.energy_j,
+        ratio_cal=m.t_compute / max(cal.t_compute, 1e-30),
+        t_vs_anchor=m.t_compute / max(anchor.t_compute, 1e-30),
+        e_vs_anchor=m.energy_j / max(anchor.energy_j, 1e-30),
+        anchor_exact=(m.t_compute == anchor.t_compute
+                      and m.energy_j == anchor.energy_j))
+
+
+def variation_case(tech: str, trials: int, seed: int = 0,
+                   m: int = 8, k: int = 64, n: int = 16) -> dict:
+    """Deterministic MC bounds + the closed-form model for one technology."""
+    b = mvm_error_bounds(tech, m=m, k=k, n=n, trials=trials, seed=seed)
+    return dict(technology=tech,
+                sigma=resolve_technology(tech).noise_sigma,
+                trials=b.trials, seed=b.seed, mean_err=b.mean_err,
+                p99_err=b.p99_err, ci95=b.ci95,
+                p99_model=modeled_p99_error(tech, k))
+
+
+def planner_case(workload: WorkloadProfile) -> dict:
+    """Plan taxi's mixed workload over the full technology axis."""
+    result = plan(TAXI_STATS, "throughput", workload=workload,
+                  technologies=(*TECHNOLOGIES, PAIR))
+    frontier = [sc.as_record() for sc in result.frontier]
+    return dict(
+        n_candidates=len(result.scored),
+        recommended=result.recommended.as_record(),
+        frontier=frontier,
+        mixed_on_frontier=[r["technology"] for r in frontier
+                           if "+" in r["technology"]])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep + hard asserts (the CI gate)")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--trials", type=int, default=8,
+                    help="Monte-Carlo trials per technology")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--clusters", type=int, default=16,
+                    help="semi-setting cluster-head count")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip the measured host-calibration pass")
+    ap.add_argument("--calibration-out", default=None, metavar="PATH",
+                    help="calibration artifact path (default: the "
+                         "devices.CALIBRATION_PATH CI uploads)")
+    args = ap.parse_args()
+
+    datasets = dict(TABLE2_DATASETS, taxi=TAXI_STATS)
+    if args.smoke:
+        datasets = {"taxi": TAXI_STATS, "cora": TABLE2_DATASETS["cora"]}
+    trials = min(args.trials, 4) if args.smoke else args.trials
+
+    cols = ("dataset", "setting", "technology", "t_der", "e_der",
+            "t_vs_anchor", "e_vs_anchor", "ratio_cal")
+    if args.csv:
+        print(",".join(cols))
+    else:
+        print(f"{'dataset':12s} {'setting':14s} {'tech':>9s} "
+              f"{'T_der s':>10s} {'E_der J':>10s} {'T/anchor':>9s} "
+              f"{'E/anchor':>9s} {'der/cal':>8s}")
+
+    rows = []
+    for name, stats in datasets.items():
+        for setting in SETTINGS:
+            for tech in TECHNOLOGIES:
+                r = run_case(name, stats, setting, tech,
+                             n_clusters=args.clusters)
+                rows.append(r)
+                if args.csv:
+                    print(",".join(
+                        f"{r[c]:.6e}" if isinstance(r[c], float) else str(r[c])
+                        for c in cols))
+                else:
+                    print(f"{r['dataset']:12s} {r['setting']:14s} "
+                          f"{r['technology']:>9s} {r['t_der']:10.3e} "
+                          f"{r['e_der']:10.3e} {r['t_vs_anchor']:9.3f} "
+                          f"{r['e_vs_anchor']:9.3f} {r['ratio_cal']:8.3f}")
+
+    print(f"\n{'tech':>9s} {'sigma':>6s} {'mean_err':>10s} {'p99_err':>10s} "
+          f"{'ci95':>10s} {'p99_model':>10s}")
+    variation = []
+    for tech in TECHNOLOGIES:
+        v = variation_case(tech, trials, seed=args.seed)
+        variation.append(v)
+        print(f"{v['technology']:>9s} {v['sigma']:6.3f} "
+              f"{v['mean_err']:10.3e} {v['p99_err']:10.3e} "
+              f"{v['ci95']:10.3e} {v['p99_model']:10.3e}")
+
+    planner = planner_case(MIXED)
+    rec = planner["recommended"]
+    print(f"\nplanner[taxi mixed, {planner['n_candidates']} candidates]: "
+          f"recommended {rec['setting']}/{rec['technology']}"
+          f"/k{rec['n_clusters']}; mixed-technology frontier entries: "
+          f"{planner['mixed_on_frontier'] or 'none'}")
+
+    timing: dict = {}
+    if not args.no_calibrate:
+        # measured wall-clocks: quarantined under the "timing" key, like
+        # every measured quantity in the BENCH determinism convention
+        cal = calibrate(path=args.calibration_out, hw=costmodel.DEFAULT_HW,
+                        iters=1 if args.smoke else 3, seed=args.seed)
+        cal_path = args.calibration_out
+        if cal_path is None:
+            from repro.devices import CALIBRATION_PATH, save_calibration
+            cal_path = save_calibration(cal, CALIBRATION_PATH)
+        m_cal = compile_mapping(
+            (max(TAXI_STATS.feature_len, 1), 128), TAXI_STATS,
+            costmodel.DEFAULT_HW, None, "centralized", args.clusters,
+            calibration=cal)
+        timing = dict(platform=cal.platform, t_cam=cal.t_cam,
+                      t_agg=cal.t_agg, t_fx=cal.t_fx,
+                      taxi_centralized_t_der_calibrated=m_cal.t_compute)
+        print(f"calibration[{cal.platform}]: t_cam {cal.t_cam:.3e} s, "
+              f"t_agg {cal.t_agg:.3e} s, t_fx {cal.t_fx:.3e} s "
+              f"-> taxi centralized derived {m_cal.t_compute:.3e} s "
+              f"(artifact: {cal_path})")
+
+    METRICS.clear()
+    METRICS.update(clusters=args.clusters, trials=trials, seed=args.seed,
+                   rows=rows, variation=variation, planner=planner,
+                   timing=timing)
+
+    if not args.smoke:
+        return 0
+    failures = []
+    # 1. the anchor contract: SOT-MRAM rows are exact identities of the
+    #    technology-free compile, and on taxi at the paper geometry they
+    #    still match the calibrated Table-1 latencies within 10%
+    for r in rows:
+        if r["technology"] == "sot-mram" and not r["anchor_exact"]:
+            failures.append(f"{r['dataset']}/{r['setting']}: sot-mram row "
+                            f"is not bit-identical to the anchor compile")
+        if (r["dataset"] == "taxi" and r["technology"] == "sot-mram"
+                and r["setting"] in ("centralized", "decentralized")
+                and abs(r["ratio_cal"] - 1.0) > 0.10):
+            failures.append(
+                f"taxi/{r['setting']}@sot-mram: derived "
+                f"{r['ratio_cal']:.3f}x calibrated (contract: within 10%)")
+    techs_seen = {r["technology"] for r in rows}
+    settings_seen = {r["setting"] for r in rows}
+    if len(techs_seen) < 4 or len(settings_seen) < 3 or len(datasets) < 2:
+        failures.append(f"sweep too small: techs {sorted(techs_seen)}, "
+                        f"settings {sorted(settings_seen)}, "
+                        f"{len(datasets)} datasets")
+    # 2. MC errors monotone in noise_sigma (sram == 0 exactly)
+    by_sigma = sorted(variation, key=lambda v: v["sigma"])
+    for a, b in zip(by_sigma, by_sigma[1:]):
+        if a["mean_err"] > b["mean_err"] or a["p99_err"] > b["p99_err"]:
+            failures.append(
+                f"MC errors not monotone in sigma: {a['technology']} "
+                f"(sigma {a['sigma']}) error exceeds {b['technology']} "
+                f"(sigma {b['sigma']})")
+    sram = next(v for v in variation if v["technology"] == "sram")
+    if sram["mean_err"] != 0.0:
+        failures.append(f"sram (sigma 0) mean error {sram['mean_err']} != 0")
+    # 3. a mixed-technology semi plan survives on the Pareto frontier
+    if not planner["mixed_on_frontier"]:
+        failures.append("no mixed-technology (reram+sram) candidate on the "
+                        "taxi Pareto frontier")
+    # 4. calibration measured something sane and round-trips strictly
+    if timing:
+        if min(timing["t_cam"], timing["t_agg"], timing["t_fx"]) <= 0:
+            failures.append(f"non-positive calibration primitive: {timing}")
+        reloaded = load_calibration(cal_path)      # strict: platform match
+        if reloaded != cal:
+            failures.append(f"calibration round-trip drift: {reloaded} "
+                            f"!= {cal}")
+    if failures:
+        print("SMOKE FAILURES:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print(f"TECH_SWEEP_SMOKE_OK: {len(techs_seen)} technologies x "
+          f"{len(settings_seen)} settings x {len(datasets)} datasets; "
+          f"sot-mram anchor exact + within 10% of Table-1 taxi; MC error "
+          f"monotone in sigma; mixed-technology semi on the frontier"
+          + ("" if not timing else "; host calibration measured + "
+             "round-tripped"))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -31,6 +31,13 @@ incrementally over the k-hop dirty frontier, and queries serve between
 commits (DESIGN.md §9):
 
   PYTHONPATH=src python examples/gnn_serve.py --stream 12
+
+Technology mode (``--tech``) plans the taxi mixed churn+query workload
+over the device-technology bank (DESIGN.md §13) and prints the per-tier
+recommendation — e.g. dense ReRAM spokes storing the partition under fast
+SRAM cluster heads — plus the Monte-Carlo accuracy bound behind it:
+
+  PYTHONPATH=src python examples/gnn_serve.py --tech
 """
 import argparse
 
@@ -135,6 +142,51 @@ def bucketed_demo(sample: int, buckets, clusters: int) -> None:
           f"bucketed == dense: {np.array_equal(outs['overlap'], ref)}")
 
 
+def tech_demo(sample: int) -> None:
+    """Device-technology quickstart (DESIGN.md §13): plan the taxi mixed
+    churn+query workload over the technology bank (four pure technologies
+    plus the ReRAM-spoke/SRAM-head pair) and print the per-tier pick, the
+    Monte-Carlo accuracy bound grounding it, and the noise-tolerance flip."""
+    import dataclasses
+
+    from repro.core.graph import TAXI_STATS
+    from repro.devices import mvm_error_bounds, technology_table
+    from repro.planner import WorkloadProfile, plan
+
+    print(f"{'technology':>10s} {'t_read':>8s} {'e_read':>8s} "
+          f"{'bits':>4s} {'sigma':>6s}")
+    for t in technology_table():
+        print(f"{t['name']:>10s} {t['read_latency_s']:8.1e} "
+              f"{t['read_energy_j']:8.1e} {t['cell_bits']:4d} "
+              f"{t['noise_sigma']:6.3f}")
+
+    techs = ("sot-mram", "reram", "sram", "fefet", ("reram", "sram"))
+    wl = WorkloadProfile(churn=0.01, queries_per_tick=64, sample=sample)
+    result = plan(TAXI_STATS, "throughput", workload=wl, technologies=techs)
+    c = result.recommended.candidate
+    print(f"\ntaxi mixed workload (1% churn/tick, 64 queries/tick): "
+          f"{len(result.scored)} candidates, {len(result.frontier)} on the "
+          f"Pareto frontier")
+    print(f"  recommended plan: {c.key}")
+    print(f"    spoke tier (partition storage): {c.spoke_technology}")
+    print(f"    head tier  (compute passes):    {c.head_technology}")
+    b = mvm_error_bounds(c.head_technology, trials=4)
+    print(f"    head-tier MC accuracy bound: mean relative MVM error "
+          f"{b.mean_err:.2e}, p99 {b.p99_err:.2e} ({b.trials} trials)")
+
+    # a tight noise tolerance prices the variation bound as infeasible and
+    # flips the pick toward the quiet technologies: under the energy
+    # objective the lowest-read-energy (but noisy) technology wins until
+    # the tolerance rejects it
+    loose = plan(TAXI_STATS, "energy", workload=wl, technologies=techs)
+    tight = plan(TAXI_STATS, "energy",
+                 workload=dataclasses.replace(wl, noise_tolerance=1e-4),
+                 technologies=techs)
+    cl, ct = loose.recommended.candidate, tight.recommended.candidate
+    print(f"  energy objective: head tier {cl.head_technology} -> "
+          f"noise_tolerance 1e-4 flips it to {ct.head_technology}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--clusters", type=int, default=0,
@@ -146,8 +198,14 @@ def main():
     ap.add_argument("--buckets", default=None, metavar="auto|N",
                     help="run the capacity-bucketed data-plane demo "
                          "instead of the static serving demo")
+    ap.add_argument("--tech", action="store_true",
+                    help="run the device-technology planning demo "
+                         "(per-tier technology pick for the taxi mixed "
+                         "workload; DESIGN.md §13)")
     args = ap.parse_args()
 
+    if args.tech:
+        return tech_demo(args.sample)
     if args.stream:
         return stream_demo(args.stream, args.sample)
     if args.buckets:

@@ -144,7 +144,8 @@ def compute_latency(setting: Setting, stats: GraphStats,
                     sample: int | None = None,
                     mode: str = "calibrated",
                     inventory=None,
-                    layer_dims: tuple | None = None) -> CoreLatency:
+                    layer_dims: tuple | None = None,
+                    technology=None, calibration=None) -> CoreLatency:
     """Eq. 2 (decentralized) / Eq. 3 (centralized) / semi (beyond-paper).
 
     ``sample`` is the runtime's configured neighbor-sample size; the
@@ -158,7 +159,13 @@ def compute_latency(setting: Setting, stats: GraphStats,
     ``layer_dims`` (default: the calibration workload, one
     ``feature_len -> 128`` layer). At the paper's geometry the two modes
     agree to ceil-rounding (< 10%, cross-validated in tests); away from it
-    the derived mode is the only one that can answer."""
+    the derived mode is the only one that can answer.
+
+    ``technology`` (device-technology name / ``TechnologyParams``) and
+    ``calibration`` (measured ``HostCalibration``) are derived-mode knobs
+    forwarded to ``compile_mapping`` (DESIGN.md §13): the calibrated mode
+    *is* the SOT-MRAM Table-1 fixed point and cannot price any other
+    device, so passing either with ``mode="calibrated"`` raises."""
     if mode not in ("calibrated", "derived"):
         raise ValueError(f"unknown mode {mode!r}; "
                          f"one of ('calibrated', 'derived')")
@@ -166,7 +173,12 @@ def compute_latency(setting: Setting, stats: GraphStats,
         from repro.mapper.compile import compile_mapping
         dims = layer_dims or (max(stats.feature_len, 1), 128)
         return compile_mapping(dims, stats, hw, inventory, setting,
-                               n_clusters, sample).core_latency()
+                               n_clusters, sample, technology=technology,
+                               calibration=calibration).core_latency()
+    if technology is not None or calibration is not None:
+        raise ValueError(
+            "technology/calibration require mode='derived': the calibrated "
+            "mode is the paper's SOT-MRAM Table-1 fixed point")
     t = per_node_latency(stats, hw, workload_scaled, sample)
     if setting == "decentralized":
         return t
@@ -252,17 +264,21 @@ def predict(setting: Setting, stats: GraphStats,
             sample: int | None = None,
             mode: str = "calibrated",
             inventory=None,
-            layer_dims: tuple | None = None) -> NetMetrics:
+            layer_dims: tuple | None = None,
+            technology=None, calibration=None) -> NetMetrics:
     """Full Eq. 1 + Eq. 6 evaluation for one setting on one workload.
 
     ``mode="calibrated"`` (default) prices compute from the Table-1
     constants; ``mode="derived"`` compiles the workload onto the crossbar
     ``inventory`` via ``repro.mapper`` and rolls up pass rounds (see
-    ``compute_latency``). The link model (Eqs. 4/5/7) is shared — crossbar
-    geometry does not move the radio."""
+    ``compute_latency``), optionally re-anchored by a device
+    ``technology`` and/or a measured host ``calibration`` (DESIGN.md
+    §13). The link model (Eqs. 4/5/7) is shared — crossbar geometry does
+    not move the radio."""
     comp = compute_latency(setting, stats, hw, workload_scaled, n_clusters,
                            sample, mode=mode, inventory=inventory,
-                           layer_dims=layer_dims)
+                           layer_dims=layer_dims, technology=technology,
+                           calibration=calibration)
     comm = communicate_latency(setting, stats, hw, n_clusters)
     p_comp, p_comm = power(setting, stats, hw, gnn_layers)
     return NetMetrics(setting, comp, comp.total, comm, p_comp, p_comm)

@@ -708,44 +708,54 @@ class ExecutionPlan:
 
     def predicted_metrics(self, workload_scaled: bool = False,
                           mode: str = "calibrated", inventory=None,
-                          layer_dims: tuple | None = None):
+                          layer_dims: tuple | None = None,
+                          technology=None, calibration=None):
         """Cost-model (Eqs. 1-7) prediction for this plan's setting.
 
         ``mode="derived"`` prices compute through the crossbar mapper
         instead of the Table-1 calibration (DESIGN.md §8); ``inventory`` /
-        ``layer_dims`` are forwarded to it."""
+        ``layer_dims`` / ``technology`` / ``calibration`` are forwarded
+        to it (DESIGN.md §13)."""
         from repro.core import costmodel
         return costmodel.predict(
             self.setting, self.graph.stats("plan"),
             workload_scaled=workload_scaled, n_clusters=self.n_clusters,
             sample=self.sample, mode=mode, inventory=inventory,
-            layer_dims=layer_dims)
+            layer_dims=layer_dims, technology=technology,
+            calibration=calibration)
 
-    def compile_mapping(self, cfg=None, hw=None, inventory=None):
+    def compile_mapping(self, cfg=None, hw=None, inventory=None,
+                        technology=None, calibration=None):
         """Compile this plan's workload onto a crossbar inventory.
 
         ``cfg`` (a GNNConfig, optional) supplies the layer dims — without
         it the mapper prices the calibration workload (one
-        ``feature_len -> 128`` layer). The result is cached on
-        ``self.mapping`` and returned (a ``repro.mapper.CompiledMapping``:
-        per-layer tilings, array allocation, pass schedule, derived
-        latency/energy)."""
+        ``feature_len -> 128`` layer). ``technology`` / ``calibration``
+        re-anchor the per-pass primitives (DESIGN.md §13). The result is
+        cached on ``self.mapping`` and returned (a
+        ``repro.mapper.CompiledMapping``: per-layer tilings, array
+        allocation, pass schedule, derived latency/energy)."""
         from repro.mapper.compile import compile_mapping
         dims = (cfg.dims if cfg is not None
                 else (max(self.graph.feature_len, 1), 128))
         self.mapping = compile_mapping(
             dims, self.graph.stats("plan"), hw, inventory, self.setting,
-            self.n_clusters, self.sample)
+            self.n_clusters, self.sample, technology=technology,
+            calibration=calibration)
         return self.mapping
 
-    def mapping_report(self, cfg=None, hw=None, inventory=None) -> str:
+    def mapping_report(self, cfg=None, hw=None, inventory=None,
+                       technology=None, calibration=None) -> str:
         """Human-readable report of the compiled hardware mapping (tile
         shapes, padding, duplication/serialization, pass schedule, derived
         latency/energy). Compiles on first use; recompiles when any
         argument is given."""
         if (self.mapping is None or cfg is not None or hw is not None
-                or inventory is not None):
-            self.compile_mapping(cfg, hw=hw, inventory=inventory)
+                or inventory is not None or technology is not None
+                or calibration is not None):
+            self.compile_mapping(cfg, hw=hw, inventory=inventory,
+                                 technology=technology,
+                                 calibration=calibration)
         return self.mapping.mapping_report()
 
     def measured_traffic(self, cfg=None, mode: str = "alltoall"):

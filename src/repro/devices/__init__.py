@@ -1,0 +1,43 @@
+"""Device-technology subsystem (DESIGN.md §13).
+
+Three parts, one contract:
+
+  * **bank** — ``TechnologyParams`` records (SOT-MRAM / ReRAM / SRAM /
+    FeFET) and the registry ``resolve_technology``; the mapper scales its
+    calibrated per-pass primitives by each technology's ratio to the
+    SOT-MRAM anchor (bit-for-bit identity at the anchor itself).
+  * **variation** — seeded Monte-Carlo conductance noise injected into the
+    bit-accurate ``crossbar_mvm`` path; ``VariationBounds`` (mean/p99
+    output error, end-to-end logit flip rate) is what lets the planner
+    reject technologies whose noise breaks the bit-accurate contract.
+  * **calibrate** — fit the per-pass primitives from measured kernel
+    wall-clocks on the current host; the ``HostCalibration`` artifact
+    feeds ``costmodel.predict(mode="derived", calibration=...)`` and is
+    platform-stamped (stale on any other platform).
+
+``bank``/``params`` are dependency-free (pure dataclasses); the heavier
+imports (jax, kernels) live inside ``variation``/``calibrate`` call paths.
+"""
+from .bank import (ANCHOR, UnknownTechnologyError, anchor_technology,
+                   known_technologies, primitive_scales, register_technology,
+                   resolve_technology, technology_table)
+from .calibrate import (CALIBRATION_PATH, CalibrationStaleError,
+                        HostCalibration, calibrate, load_calibration,
+                        measure_primitives, save_calibration)
+from .params import FEFET, RERAM, SOT_MRAM, SRAM, TechnologyParams
+from .variation import (NOISE_GRID, VariationBounds, accuracy_bounds,
+                        layer_noise, modeled_p99_error, mvm_error_bounds,
+                        noisy_forward, sample_conductance_noise)
+
+__all__ = [
+    "ANCHOR", "UnknownTechnologyError", "anchor_technology",
+    "known_technologies", "primitive_scales", "register_technology",
+    "resolve_technology", "technology_table",
+    "CALIBRATION_PATH", "CalibrationStaleError", "HostCalibration",
+    "calibrate", "load_calibration", "measure_primitives",
+    "save_calibration",
+    "FEFET", "RERAM", "SOT_MRAM", "SRAM", "TechnologyParams",
+    "NOISE_GRID", "VariationBounds", "accuracy_bounds", "layer_noise",
+    "modeled_p99_error", "mvm_error_bounds", "noisy_forward",
+    "sample_conductance_noise",
+]

@@ -1,0 +1,154 @@
+"""On-host auto-calibration of the costmodel's per-pass primitives.
+
+The derived cost model (``mapper.PassPrimitives``) normally inverts its
+per-pass latencies from the paper's Table 1 — a fixed point that says
+nothing about the host actually running the kernels. This harness measures
+them instead: one CAM search pass, one aggregation-crossbar pass, and one
+fx-crossbar pass are timed with the same min-of-iters protocol the
+autotuner uses (``tuning.measure.time_callable``), and the fit is written
+to a JSON artifact that ``costmodel.predict(mode="derived",
+calibration=...)`` (and ``compile_mapping(calibration=...)``) consumes in
+place of the Table-1 inversion — ``mode="derived"`` then tracks the
+current host, anywhere.
+
+Staleness rule (DESIGN.md §13): the artifact records the platform tag it
+was measured on (``tuning.current_platform()`` — jax backend plus
+``-interp`` when Pallas would run interpreted). Loading it on a different
+platform raises ``CalibrationStaleError`` unless ``strict=False`` — a
+CPU-interpreter fit silently pricing TPU hardware is exactly the bug the
+rule exists to prevent. The artifact uploads from CI alongside the
+tuned-config cache (``ci.yml``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+CALIBRATION_PATH = os.path.join("results", "host_calibration.json")
+
+
+class CalibrationStaleError(ValueError):
+    """A calibration artifact measured on another platform was loaded
+    strictly. Re-measure with ``calibrate()`` or pass ``strict=False``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HostCalibration:
+    """Measured per-pass primitive latencies [s] on one host platform.
+
+    ``t_cam`` — one CAM search pass (a query block against one
+    ``cam_rows`` entry block); ``t_agg`` / ``t_fx`` — one full
+    aggregation / feature-extraction crossbar pass at the calibration
+    geometry (``agg_rows x agg_cols`` / ``fx_rows x fx_cols``). Geometry
+    scaling on top of these is ``PassPrimitives.derive``'s job — the
+    artifact is the measured anchor, not the whole model.
+    """
+    platform: str
+    t_cam: float
+    t_agg: float
+    t_fx: float
+    iters: int = 3
+    seed: int = 0
+
+    def __post_init__(self):
+        for f in ("t_cam", "t_agg", "t_fx"):
+            if getattr(self, f) <= 0:
+                raise ValueError(f"measured {f} must be > 0, "
+                                 f"got {getattr(self, f)}")
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "HostCalibration":
+        return cls(**{f.name: d[f.name] for f in dataclasses.fields(cls)})
+
+
+def _cam_runner(hw, seed: int, interpret):
+    """() -> (match, counts) for one CAM search pass on the pallas path."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.cam_match.ops import search
+    rng = np.random.default_rng(seed)
+    ci = jnp.asarray(rng.integers(0, 4096, hw.cam_rows).astype(np.int32))
+    q = jnp.asarray(rng.integers(0, 4096, 8).astype(np.int32))
+
+    def run():
+        return search(ci, q, backend="pallas", interpret=interpret)
+    return run
+
+
+def measure_primitives(hw=None, iters: int = 3, warmup: int = 1,
+                       seed: int = 0, interpret=None) -> "HostCalibration":
+    """Measure the three per-pass primitives on the current host.
+
+    Crossbar passes reuse the autotuner's runner builders at the
+    calibration geometries (an 8-row activation block over one full
+    ``rows x cols`` array — the launch computes exactly one logical
+    pass); the CAM pass drives the search kernel over one entry block.
+    Min-of-``iters`` wall-clocks, compile excluded (the runner protocol).
+    """
+    from repro.tuning.autotune import current_platform
+    from repro.tuning.measure import crossbar_runner, time_callable
+    from repro.tuning.space import CrossbarConfig, CrossbarGeometry
+    if hw is None:
+        from repro.core.costmodel import DEFAULT_HW
+        hw = DEFAULT_HW
+    cfg = CrossbarConfig()
+    geoms = {
+        "t_agg": CrossbarGeometry(m=8, k=hw.agg_rows, n=hw.agg_cols,
+                                  rows_per_xbar=hw.agg_rows),
+        "t_fx": CrossbarGeometry(m=8, k=hw.fx_rows, n=hw.fx_cols,
+                                 rows_per_xbar=hw.fx_rows),
+    }
+    t = {name: time_callable(crossbar_runner(g, cfg, seed=seed,
+                                             interpret=interpret),
+                             iters=iters, warmup=warmup)
+         for name, g in geoms.items()}
+    t["t_cam"] = time_callable(_cam_runner(hw, seed, interpret),
+                               iters=iters, warmup=warmup)
+    return HostCalibration(platform=current_platform(), t_cam=t["t_cam"],
+                           t_agg=t["t_agg"], t_fx=t["t_fx"],
+                           iters=iters, seed=seed)
+
+
+def save_calibration(cal: HostCalibration,
+                     path: str = CALIBRATION_PATH) -> str:
+    """Write the artifact (deterministic JSON, the BENCH/cache convention)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        f.write(json.dumps(cal.as_dict(), sort_keys=True, indent=2) + "\n")
+    return path
+
+
+def load_calibration(path: str = CALIBRATION_PATH,
+                     strict: bool = True) -> "HostCalibration":
+    """Load an artifact; enforce the platform staleness rule.
+
+    ``strict=True`` raises ``CalibrationStaleError`` when the artifact's
+    platform tag differs from the current one; ``strict=False`` returns it
+    anyway (cross-platform inspection, comparison tables).
+    """
+    with open(path) as f:
+        cal = HostCalibration.from_dict(json.load(f))
+    if strict:
+        from repro.tuning.autotune import current_platform
+        here = current_platform()
+        if cal.platform != here:
+            raise CalibrationStaleError(
+                f"calibration artifact {path!r} was measured on "
+                f"{cal.platform!r} but this host is {here!r}; re-run "
+                f"devices.calibrate() here or load with strict=False")
+    return cal
+
+
+def calibrate(path: str | None = CALIBRATION_PATH, hw=None, iters: int = 3,
+              warmup: int = 1, seed: int = 0,
+              interpret=None) -> "HostCalibration":
+    """Measure + persist in one call; ``path=None`` skips the write."""
+    cal = measure_primitives(hw, iters=iters, warmup=warmup, seed=seed,
+                             interpret=interpret)
+    if path is not None:
+        save_calibration(cal, path)
+    return cal

@@ -1,4 +1,12 @@
-"""Jitted public wrapper for the traversal-core search CAM."""
+"""Jitted public wrapper for the traversal-core search CAM.
+
+``bq``/``be`` (query/entry block) resolve like the other kernels' block
+params (DESIGN.md §11): an explicit value wins, else a ``TunedKernels``
+bundle passed via ``tuned=``, else the process-wide tuning registry, else
+the hand-picked 8/128. Every candidate is bit-identical — the blocks only
+re-tile independent equality compares, and pad edges use non-matching
+sentinels.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,15 +17,29 @@ import jax.numpy as jnp
 from .cam_match import cam_search as _pallas_search
 from .ref import cam_search_ref, cam_scan_ref
 
+DEFAULT_BQ = 8
+DEFAULT_BE = 128
 
-@functools.partial(jax.jit, static_argnames=("backend", "bq", "be", "interpret"))
-def search(ci: jax.Array, queries: jax.Array, backend: str = "jnp",
-           bq: int = 8, be: int = 128, interpret: bool | None = None):
-    """Match queries against the CSR column-index array.
 
-    Returns (match [Q, E] int8, counts [Q] int32). Pads E/Q internally; pad
-    edges use sentinel -1 (never a valid node id) so they can't match.
-    """
+def _resolve_blocks(ci, queries, bq, be, tuned) -> tuple:
+    if bq is not None and be is not None:
+        return int(bq), int(be)
+    from repro.tuning.registry import lookup as _registry_lookup
+    from repro.tuning.space import CamGeometry
+    geom = CamGeometry(e=int(ci.shape[0]), q=int(queries.shape[0]))
+    cfg = tuned.lookup(geom.key()) if tuned is not None else None
+    if cfg is None:
+        cfg = _registry_lookup(geom.key())
+    return (int(bq if bq is not None
+                else (cfg.bq if cfg is not None else DEFAULT_BQ)),
+            int(be if be is not None
+                else (cfg.be if cfg is not None else DEFAULT_BE)))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("backend", "bq", "be", "interpret"))
+def _search(ci: jax.Array, queries: jax.Array, backend: str,
+            bq: int, be: int, interpret: bool | None):
     if backend == "jnp":
         return cam_search_ref(ci, queries)
     assert backend == "pallas", backend
@@ -29,6 +51,23 @@ def search(ci: jax.Array, queries: jax.Array, backend: str = "jnp",
     match, counts = _pallas_search(ci_p, q_p, bq=bq, be=be,
                                    interpret=interpret)
     return match[:q, :e], counts[:q, 0]
+
+
+def search(ci: jax.Array, queries: jax.Array, backend: str = "jnp",
+           bq: int | None = None, be: int | None = None, tuned=None,
+           interpret: bool | None = None):
+    """Match queries against the CSR column-index array.
+
+    Returns (match [Q, E] int8, counts [Q] int32). Pads E/Q internally; pad
+    edges use sentinel -1 (never a valid node id) so they can't match.
+    Block resolution is eager (outside jit) so the blocks are static args
+    of the underlying kernel launch.
+    """
+    if backend == "pallas":
+        bq, be = _resolve_blocks(ci, queries, bq, be, tuned)
+    else:
+        bq, be = bq or DEFAULT_BQ, be or DEFAULT_BE
+    return _search(ci, queries, backend, bq, be, interpret)
 
 
 scan = cam_scan_ref  # RP scan is a searchsorted — pure jnp on all backends

@@ -1,7 +1,9 @@
-from .ref import CrossbarNumerics, crossbar_matmul_ref, crossbar_matmul_signed_ref
+from .ref import (CrossbarNumerics, apply_conductance_noise,
+                  crossbar_matmul_ref, crossbar_matmul_signed_ref)
 from .ops import crossbar_matmul, crossbar_matmul_signed
 
 __all__ = [
-    "CrossbarNumerics", "crossbar_matmul_ref", "crossbar_matmul_signed_ref",
-    "crossbar_matmul", "crossbar_matmul_signed",
+    "CrossbarNumerics", "apply_conductance_noise", "crossbar_matmul_ref",
+    "crossbar_matmul_signed_ref", "crossbar_matmul",
+    "crossbar_matmul_signed",
 ]

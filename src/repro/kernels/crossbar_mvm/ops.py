@@ -22,7 +22,8 @@ from repro.tuning import registry as _tuning_registry
 from repro.tuning.space import CrossbarGeometry
 
 from .crossbar_mvm import crossbar_matmul_quantized
-from .ref import CrossbarNumerics, quantize_inputs, quantize_weights
+from .ref import (CrossbarNumerics, apply_conductance_noise,
+                  quantize_inputs, quantize_weights)
 
 
 def _resolve_blocks(x, w, cfg, bm, bn, depth, tuned):
@@ -48,12 +49,14 @@ def _resolve_blocks(x, w, cfg, bm, bn, depth, tuned):
                    static_argnames=("cfg", "bm", "bn", "depth", "interpret"))
 def _crossbar_matmul(x: jax.Array, w: jax.Array, cfg: CrossbarNumerics,
                      bm: int, bn: int, depth: int,
-                     interpret: bool | None) -> jax.Array:
+                     interpret: bool | None,
+                     w_noise: jax.Array | None = None) -> jax.Array:
     m, k = x.shape
     _, n = w.shape
     grid = padded_grid(m, k, n, cfg.rows_per_xbar, bm=bm, bn=bn)
     xq, xs = quantize_inputs(x, cfg)
     wq, ws = quantize_weights(w, cfg)
+    wq = apply_conductance_noise(wq, w_noise, cfg)
     xq = jnp.pad(xq, ((0, grid.m_pad - m), (0, grid.k_pad - k)))
     wq = jnp.pad(wq, ((0, grid.k_pad - k), (0, grid.n_pad - n)))
     out = crossbar_matmul_quantized(xq, wq, cfg, bm=bm, bn=bn, depth=depth,
@@ -65,7 +68,8 @@ def crossbar_matmul(x: jax.Array, w: jax.Array,
                     cfg: CrossbarNumerics = CrossbarNumerics(),
                     bm: int | None = None, bn: int | None = None,
                     depth: int | None = None,
-                    interpret: bool | None = None, tuned=None) -> jax.Array:
+                    interpret: bool | None = None, tuned=None,
+                    w_noise: jax.Array | None = None) -> jax.Array:
     """y = x @ w through the crossbar numerics, via the Pallas kernel.
 
     x: [M, K] float (clipped to >= 0, as in the post-ReLU cores)
@@ -73,12 +77,15 @@ def crossbar_matmul(x: jax.Array, w: jax.Array,
     ``bm``/``bn``/``depth`` left at ``None`` resolve through the tuned
     bundle / tuning registry (defaults 128/128/1 on a miss); explicit
     values always win. Numerics are block-size and depth invariant.
+    ``w_noise``: optional [K, N] conductance-code perturbation applied to
+    the programmed weights (``devices.variation``) — ignored on the ideal
+    path, which has no conductances.
     """
     if cfg.ideal:
         return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
                        preferred_element_type=jnp.float32)
     bm, bn, depth = _resolve_blocks(x, w, cfg, bm, bn, depth, tuned)
-    return _crossbar_matmul(x, w, cfg, bm, bn, depth, interpret)
+    return _crossbar_matmul(x, w, cfg, bm, bn, depth, interpret, w_noise)
 
 
 def crossbar_matmul_signed(x: jax.Array, w: jax.Array,
@@ -86,14 +93,16 @@ def crossbar_matmul_signed(x: jax.Array, w: jax.Array,
                            bm: int | None = None, bn: int | None = None,
                            depth: int | None = None,
                            interpret: bool | None = None,
-                           tuned=None) -> jax.Array:
-    """Signed-activation variant (two DAC passes, digital recombine)."""
+                           tuned=None,
+                           w_noise: jax.Array | None = None) -> jax.Array:
+    """Signed-activation variant (two DAC passes, digital recombine); one
+    ``w_noise`` draw is shared by both passes — same programmed arrays."""
     if cfg.ideal:
         return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
                        preferred_element_type=jnp.float32)
     bm, bn, depth = _resolve_blocks(x, w, cfg, bm, bn, depth, tuned)
     pos = _crossbar_matmul(jnp.maximum(x, 0.0), w, cfg, bm, bn, depth,
-                           interpret)
+                           interpret, w_noise)
     neg = _crossbar_matmul(jnp.maximum(-x, 0.0), w, cfg, bm, bn, depth,
-                           interpret)
+                           interpret, w_noise)
     return pos - neg

@@ -71,6 +71,22 @@ def quantize_weights(w: jax.Array, cfg: CrossbarNumerics):
     return codes.astype(jnp.float32), scale
 
 
+def apply_conductance_noise(wq: jax.Array, w_noise, cfg: CrossbarNumerics):
+    """Perturb programmed conductance codes by an additive noise tensor.
+
+    ``w_noise`` is a ``[K, N]`` float32 draw in conductance-code units
+    (``devices.variation.sample_conductance_noise`` — grid-quantized so
+    every partial sum stays exactly representable in f32 and the three
+    backends remain byte-identical). The result is clipped to the physical
+    code range; ``None`` is the clean path, returned untouched. A signed
+    MVM shares one draw across both DAC passes — same programmed arrays.
+    """
+    if w_noise is None:
+        return wq
+    return jnp.clip(wq + w_noise.astype(jnp.float32),
+                    -cfg.w_levels, cfg.w_levels)
+
+
 def _adc(partial: jax.Array, cfg: CrossbarNumerics) -> jax.Array:
     """ADC transfer function on one source-line partial sum (integer domain).
 
@@ -84,10 +100,13 @@ def _adc(partial: jax.Array, cfg: CrossbarNumerics) -> jax.Array:
 
 @partial(jax.jit, static_argnames="cfg")
 def crossbar_matmul_ref(x: jax.Array, w: jax.Array,
-                        cfg: CrossbarNumerics = CrossbarNumerics()) -> jax.Array:
+                        cfg: CrossbarNumerics = CrossbarNumerics(),
+                        w_noise: jax.Array | None = None) -> jax.Array:
     """Behavioural crossbar MVM: y = x @ w through DAC/crossbar/ADC numerics.
 
     x: [M, K] float (expected >= 0; clipped otherwise), w: [K, N] float.
+    ``w_noise``: optional [K, N] conductance-code perturbation
+    (``apply_conductance_noise``) — the Monte-Carlo variation hook.
     Returns [M, N] float32.
     """
     if cfg.ideal:
@@ -98,6 +117,7 @@ def crossbar_matmul_ref(x: jax.Array, w: jax.Array,
     assert k == k2, (x.shape, w.shape)
     xq, xs = quantize_inputs(x, cfg)
     wq, ws = quantize_weights(w, cfg)
+    wq = apply_conductance_noise(wq, w_noise, cfg)
 
     r = cfg.rows_per_xbar
     n_tiles = -(-k // r)
@@ -125,12 +145,14 @@ def crossbar_matmul_ref(x: jax.Array, w: jax.Array,
 
 @partial(jax.jit, static_argnames="cfg")
 def crossbar_matmul_signed_ref(x: jax.Array, w: jax.Array,
-                               cfg: CrossbarNumerics = CrossbarNumerics()) -> jax.Array:
+                               cfg: CrossbarNumerics = CrossbarNumerics(),
+                               w_noise: jax.Array | None = None) -> jax.Array:
     """Signed-activation variant: x is split into positive/negative parts that
-    are driven in two passes and recombined digitally (2 DAC passes)."""
+    are driven in two passes and recombined digitally (2 DAC passes); one
+    ``w_noise`` draw is shared by both — same programmed arrays."""
     if cfg.ideal:
         return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
                        preferred_element_type=jnp.float32)
-    pos = crossbar_matmul_ref(jnp.maximum(x, 0.0), w, cfg)
-    neg = crossbar_matmul_ref(jnp.maximum(-x, 0.0), w, cfg)
+    pos = crossbar_matmul_ref(jnp.maximum(x, 0.0), w, cfg, w_noise)
+    neg = crossbar_matmul_ref(jnp.maximum(-x, 0.0), w, cfg, w_noise)
     return pos - neg

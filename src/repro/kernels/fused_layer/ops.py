@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.crossbar_mvm.ref import (CrossbarNumerics,
+                                            apply_conductance_noise,
                                             quantize_weights)
 from repro.mapper.tiling import padded_grid
 from repro.tuning import registry as _tuning_registry
@@ -62,7 +63,8 @@ def fused_gnn_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
                     w: jax.Array, b: jax.Array,
                     cfg: CrossbarNumerics = CrossbarNumerics(ideal=True),
                     *, relu: bool = False, bf: int | None = None,
-                    tuned=None, interpret: bool | None = None) -> jax.Array:
+                    tuned=None, interpret: bool | None = None,
+                    w_noise: jax.Array | None = None) -> jax.Array:
     """act((A_hat @ X) @ W + b) with Z resident in VMEM throughout.
 
     x: [N, F]; neighbors: [Nd, S] int32; weights: [Nd, S]; w: [F, H]; b: [H].
@@ -70,11 +72,13 @@ def fused_gnn_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
     crossbar_mvm path) for both ideal and bit-accurate ``cfg``. ``bf``
     left at ``None`` resolves through the tuned bundle / registry
     (``repro.tuning``); padding is zeros either way, so outputs are
-    bit-identical across bf choices.
+    bit-identical across bf choices. ``w_noise``: optional [F, H]
+    conductance-code perturbation on the programmed weights
+    (``devices.variation``) — ignored on the ideal path.
     """
     bf = _resolve_bf(x, neighbors, w, cfg, bf, tuned)
     return _fused_gnn_layer(x, neighbors, weights, w, b, cfg, relu=relu,
-                            bf=bf, interpret=interpret)
+                            bf=bf, interpret=interpret, w_noise=w_noise)
 
 
 @functools.partial(jax.jit,
@@ -83,7 +87,8 @@ def _fused_gnn_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
                      w: jax.Array, b: jax.Array,
                      cfg: CrossbarNumerics,
                      *, relu: bool, bf: int,
-                     interpret: bool | None) -> jax.Array:
+                     interpret: bool | None,
+                     w_noise: jax.Array | None = None) -> jax.Array:
     n, f = x.shape
     f2, h = w.shape
     assert f == f2, (x.shape, w.shape)
@@ -106,6 +111,7 @@ def _fused_gnn_layer(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
     scale_pos = jnp.maximum(jnp.max(zmax[:, 0]), 1e-8) / cfg.in_levels
     scale_neg = jnp.maximum(jnp.max(zmax[:, 1]), 1e-8) / cfg.in_levels
     wq, w_scale = quantize_weights(w, cfg)
+    wq = apply_conductance_noise(wq, w_noise, cfg)
     wqp = _pad_cols(_pad_rows(wq, grid.k_pad), grid.n_pad)
     bp = _pad_cols(b[None], grid.n_pad)[0]
     scales = jnp.stack([scale_pos, scale_neg, w_scale])

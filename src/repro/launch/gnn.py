@@ -200,8 +200,22 @@ def main() -> None:
                     choices=("manual", "auto"),
                     help="auto: let repro.planner pick setting/backend/"
                          "clusters/policy for this workload (DESIGN.md §10)")
+    ap.add_argument("--tech", default=None, metavar="NAME[+NAME]",
+                    help="device technology for the derived cost/mapping "
+                         "reports (sot-mram, reram, sram, fefet; "
+                         "DESIGN.md §13); a 'spoke+head' pair like "
+                         "'reram+sram' bills ReRAM spoke storage under "
+                         "SRAM cluster heads (semi setting); with "
+                         "--plan auto the planner searches within it")
     args = ap.parse_args()
 
+    tech = None
+    if args.tech:
+        tech = (tuple(args.tech.split("+")) if "+" in args.tech
+                else args.tech)
+        from repro.devices import resolve_technology
+        for t in (tech if isinstance(tech, tuple) else (tech,)):
+            resolve_technology(t)       # typos fail here, by name
     g = dataset_like(args.dataset, scale=args.scale, seed=0).gcn_normalize()
     if args.plan_mode == "auto":
         from repro.planner import WorkloadProfile, plan as plan_search
@@ -210,7 +224,8 @@ def main() -> None:
             queries_per_tick=float(args.batch),
             sample=args.sample)
         objective = "throughput" if args.stream else "latency"
-        result = plan_search(g, objective, workload=wl, shortlist=2)
+        result = plan_search(g, objective, workload=wl, shortlist=2,
+                             **(dict(technologies=(tech,)) if tech else {}))
         print(result.summary())
         rec = result.recommended.candidate
         args.setting, args.backend = rec.setting, rec.backend
@@ -267,10 +282,15 @@ def main() -> None:
     print(f"served {served} lookups in {dt * 1e3:.1f} ms "
           f"({served / dt:.0f} lookups/s)")
 
-    m = plan.predicted_metrics()
-    print(f"cost model ({args.setting}): T_compute {m.t_compute:.3e} s, "
+    # a per-tier pair prices the mapper with the head (compute) tier; the
+    # spoke tier only bills storage energy, which the planner accounts
+    head_tech = tech[-1] if isinstance(tech, tuple) else tech
+    m = plan.predicted_metrics(**(dict(mode="derived", technology=head_tech)
+                                  if tech else {}))
+    label = f"{args.setting}, {args.tech}" if tech else args.setting
+    print(f"cost model ({label}): T_compute {m.t_compute:.3e} s, "
           f"T_comm {m.t_communicate:.3e} s, P {m.p_net * 1e3:.1f} mW")
-    mapping = plan.compile_mapping(cfg)
+    mapping = plan.compile_mapping(cfg, technology=head_tech)
     print(f"mapper-derived T_compute {mapping.t_compute:.3e} s "
           f"({mapping.t_compute / max(m.t_compute, 1e-30):.2f}x calibrated); "
           f"run with --mapping for the full report")

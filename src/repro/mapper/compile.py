@@ -42,8 +42,9 @@ SETTINGS = ("centralized", "decentralized", "semi")
 @dataclasses.dataclass(frozen=True)
 class PassPrimitives:
     """Per-round latency [s] and per-tile-pass read energy [J] per core,
-    derived from the calibrated ``HardwareParams`` and scaled to the target
-    inventory's geometry."""
+    derived from the calibrated ``HardwareParams`` (or a measured
+    ``HostCalibration``), scaled to the target inventory's geometry and
+    device technology."""
     t_cam: float
     t_agg: float
     t_fx: float
@@ -52,10 +53,19 @@ class PassPrimitives:
     e_fx: float
 
     @classmethod
-    def derive(cls, hw, inv: XbarInventory) -> "PassPrimitives":
+    def derive(cls, hw, inv: XbarInventory, tech=None,
+               calibration=None) -> "PassPrimitives":
         # per-round latencies at the calibration geometry (Table-1 inversion:
-        # decentralized = 1 array/core; taxi fx workload = 2 serialized tiles)
-        t_cam_cal, t_agg_cal, t_fx_cal = hw.t1, hw.t2, hw.t3 / 2.0
+        # decentralized = 1 array/core; taxi fx workload = 2 serialized
+        # tiles) — or, when a HostCalibration artifact is supplied, the
+        # per-pass wall-clocks measured on the current host
+        # (devices.calibrate; same geometry convention)
+        if calibration is not None:
+            t_cam_cal, t_agg_cal, t_fx_cal = (calibration.t_cam,
+                                              calibration.t_agg,
+                                              calibration.t_fx)
+        else:
+            t_cam_cal, t_agg_cal, t_fx_cal = hw.t1, hw.t2, hw.t3 / 2.0
         # MVM pass latency tracks the ADC read-out serialization over
         # columns; the bit-serial DAC cycle count is geometry-independent.
         # CAM search is match-line parallel: constant per pass.
@@ -68,7 +78,16 @@ class PassPrimitives:
                  * (inv.agg_rows * inv.agg_cols) / (hw.agg_rows * hw.agg_cols))
         e_fx = ((hw.p_cores_cent[2] / hw.m3) * t_fx_cal
                 * (inv.fx_rows * inv.fx_cols) / (hw.fx_rows * hw.fx_cols))
-        return cls(t_cam_cal, t_agg, t_fx, e_cam, e_agg, e_fx)
+        t_cam = t_cam_cal
+        if tech is not None:
+            # technology scaling: read-path ratios to the SOT-MRAM anchor
+            # (devices.bank) — exactly (1.0, 1.0) at the anchor itself, so
+            # the Table-1 calibration point is reproduced bit-for-bit
+            from repro.devices.bank import primitive_scales
+            lat, ene = primitive_scales(tech)
+            t_cam, t_agg, t_fx = t_cam * lat, t_agg * lat, t_fx * lat
+            e_cam, e_agg, e_fx = e_cam * ene, e_agg * ene, e_fx * ene
+        return cls(t_cam, t_agg, t_fx, e_cam, e_agg, e_fx)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +122,7 @@ class CompiledMapping:
     primitives: PassPrimitives
     schedule: PassSchedule
     sample: int | None = None
+    technology: str = "sot-mram"
 
     # ---- latency rollup (rounds x t_pass), Eq. 1-compatible serial sum ----
     @property
@@ -164,7 +184,7 @@ class CompiledMapping:
             f"inventory: CAM {inv.cam_arrays}x({inv.cam_rows}x{inv.cam_cols})"
             f", AGG {inv.agg_arrays}x({inv.agg_rows}x{inv.agg_cols}), "
             f"FX {inv.fx_arrays}x({inv.fx_rows}x{inv.fx_cols}), "
-            f"{inv.cell_bits} bits/cell",
+            f"{inv.cell_bits} bits/cell, technology {self.technology}",
         ]
         lines += [lm.describe() for lm in self.layers]
         lines += [
@@ -201,8 +221,8 @@ def items_per_device(setting: str, n_nodes: int, n_clusters: int = 1) -> int:
 
 def compile_mapping(model, stats, hw=None, inventory: XbarInventory = None,
                     setting: str = "centralized", n_clusters: int = 1,
-                    sample: int | None = None,
-                    w_bits: int | None = None) -> CompiledMapping:
+                    sample: int | None = None, w_bits: int | None = None,
+                    technology=None, calibration=None) -> CompiledMapping:
     """Compile (GNN layer dims, graph stats, hardware) into a CompiledMapping.
 
     ``model``: a ``GNNConfig``-like object exposing ``.dims`` or a plain
@@ -212,6 +232,14 @@ def compile_mapping(model, stats, hw=None, inventory: XbarInventory = None,
     (default: the setting's paper inventory via
     ``XbarInventory.from_hardware``); ``sample``: the runtime's neighbor
     sample size (default: the Table-2 ``avg_cs`` heuristic).
+
+    ``technology``: a registered technology name or ``TechnologyParams``
+    overriding the inventory's; the per-pass primitives are scaled by the
+    technology's read-path ratios to the SOT-MRAM anchor (exact identity
+    at the anchor). An unregistered name raises the named
+    ``UnknownTechnologyError`` here, before any latency rollup.
+    ``calibration``: a measured ``HostCalibration`` replacing the Table-1
+    inversion as the primitives' anchor point (``devices.calibrate``).
     """
     if setting not in SETTINGS:
         raise ValueError(f"unknown setting {setting!r}; one of {SETTINGS}")
@@ -219,8 +247,18 @@ def compile_mapping(model, stats, hw=None, inventory: XbarInventory = None,
         from repro.core.costmodel import DEFAULT_HW
         hw = DEFAULT_HW
     inv = inventory or XbarInventory.from_hardware(hw, setting)
+    # resolve the technology up front: a typo'd name must fail with the
+    # named registry error, not deep inside the latency rollup
+    from repro.devices.bank import resolve_technology
+    tech = resolve_technology(
+        technology if technology is not None else inv.technology)
+    if technology is not None and inv.technology != tech.name:
+        # explicit override: rebuild the arrays from the named technology
+        # (cell_bits follows it); an inventory already carrying a custom
+        # technology/cell_bits pairing is the caller's explicit choice
+        inv = inv.with_technology(tech)
     dims = _layer_dims(model)
-    prim = PassPrimitives.derive(hw, inv)
+    prim = PassPrimitives.derive(hw, inv, tech=tech, calibration=calibration)
 
     items = items_per_device(setting, stats.n_nodes, n_clusters)
     n_devices = (1 if setting == "centralized"
@@ -253,4 +291,5 @@ def compile_mapping(model, stats, hw=None, inventory: XbarInventory = None,
                            (prim.t_cam, prim.t_agg, prim.t_fx))
 
     return CompiledMapping(setting, n_devices, items, inv, tuple(layers),
-                           cam, agg, fx, prim, sched, sample=sample)
+                           cam, agg, fx, prim, sched, sample=sample,
+                           technology=tech.name)

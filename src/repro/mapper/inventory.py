@@ -23,6 +23,11 @@ class XbarInventory:
     array count and rows x cols geometry. ``cell_bits`` is the storage
     resolution of one device pair — fewer bits than the weight precision
     forces bit-slicing across columns (see ``tiling.LayerTiling``).
+    ``technology`` names the device technology the arrays are built from
+    (``repro.devices.bank``); the default is the paper's SOT-MRAM
+    calibration point, and the name is resolved — and validated — by
+    ``compile_mapping``, which scales its per-pass primitives by the
+    technology's ratio to that anchor.
     """
     cam_arrays: int = 2000
     cam_rows: int = 512
@@ -34,12 +39,15 @@ class XbarInventory:
     fx_rows: int = 128
     fx_cols: int = 128
     cell_bits: int = 8
+    technology: str = "sot-mram"
 
     def __post_init__(self):
         for f in dataclasses.fields(self):
-            if getattr(self, f.name) < 1:
+            if f.type == "int" and getattr(self, f.name) < 1:
                 raise ValueError(f"inventory field {f.name} must be >= 1, "
                                  f"got {getattr(self, f.name)}")
+        if not self.technology:
+            raise ValueError("inventory technology must be non-empty")
 
     @property
     def total_cells(self) -> tuple:
@@ -85,3 +93,18 @@ class XbarInventory:
         return dataclasses.replace(self, agg_arrays=agg_n, agg_rows=size,
                                    agg_cols=size, fx_arrays=fx_n,
                                    fx_rows=size, fx_cols=size)
+
+    def with_technology(self, tech) -> "XbarInventory":
+        """Rebuild the arrays from another device technology.
+
+        ``tech`` is a registered name or a ``TechnologyParams``
+        (``repro.devices.bank.resolve_technology`` — an unknown name
+        raises the named ``UnknownTechnologyError``). The cell storage
+        resolution follows the technology (fewer ``cell_bits`` triggers
+        column bit-slicing in the tiling); the per-pass latency/energy
+        scaling happens in ``compile_mapping``'s primitive derivation.
+        """
+        from repro.devices.bank import resolve_technology
+        t = resolve_technology(tech)
+        return dataclasses.replace(self, technology=t.name,
+                                   cell_bits=t.cell_bits)

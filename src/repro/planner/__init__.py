@@ -5,8 +5,9 @@ wins communication ~790x, decentralized wins computation ~1400x, and the
 authors call for a hybrid. This package decides instead of tabulating:
 given graph statistics, a crossbar inventory, and a churn/query workload
 profile, it searches ``setting × backend × cluster count × crossbar size ×
-refresh policy`` through pluggable evaluators — the calibrated Eqs. 1-7
-cost model, the first-principles mapper rollup, and measured traffic on
+refresh policy × device technology`` through pluggable evaluators — the
+calibrated Eqs. 1-7 cost model, the first-principles mapper rollup, the
+device-technology accuracy bound, and measured traffic on
 the executed exchange tables — and returns a Pareto frontier plus one
 recommended, materializable ``ExecutionPlan``. ``ReplanMonitor`` closes
 the loop online: when a serving ``StreamingGNNServer``'s measured tick
@@ -23,9 +24,9 @@ exhaustive sweep of the planner's own evaluators; hybrid-vs-pure on the
 mixed workload) and ``benchmarks/load_serve.py`` (measured serving
 throughput / latency percentiles per config).
 """
-from .evaluate import (DEFAULT_EVALUATORS, PlanContext, cost_evaluator,
-                       evaluate, mapper_evaluator, memory_evaluator,
-                       traffic_evaluator)
+from .evaluate import (DEFAULT_EVALUATORS, PlanContext, accuracy_evaluator,
+                       cost_evaluator, evaluate, mapper_evaluator,
+                       memory_evaluator, traffic_evaluator)
 from .objective import OBJECTIVES, effective_compute, score, tick_costs
 from .plan import (PlannerResult, ScoredCandidate, pareto_frontier, plan,
                    score_candidate)
@@ -36,7 +37,8 @@ from .space import (BACKENDS, LAYOUTS, POLICIES, SETTINGS, Candidate,
 __all__ = [
     "BACKENDS", "LAYOUTS", "POLICIES", "SETTINGS",
     "Candidate", "WorkloadProfile", "candidate_space",
-    "DEFAULT_EVALUATORS", "PlanContext", "cost_evaluator", "evaluate",
+    "DEFAULT_EVALUATORS", "PlanContext", "accuracy_evaluator",
+    "cost_evaluator", "evaluate",
     "mapper_evaluator", "memory_evaluator", "traffic_evaluator",
     "OBJECTIVES", "effective_compute", "score", "tick_costs",
     "PlannerResult", "ScoredCandidate", "pareto_frontier", "plan",

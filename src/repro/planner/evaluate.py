@@ -27,6 +27,10 @@ Built-ins:
     candidate's data-plane layout (``device_bytes``): the Pareto memory
     axis that separates dense from bucketed candidates. Closed-form, no
     partition built.
+  * ``accuracy_evaluator`` — modeled p99 relative MVM error of the
+    candidate's technology under conductance variation
+    (``noise_p99_model``): the Pareto accuracy axis and the quantity the
+    ``noise_tolerance`` infeasibility gate reads (DESIGN.md §13).
   * ``traffic_evaluator`` — measured wire bytes on a *concrete* graph
     (``distributed.traffic.measure_execution`` / ``measure_incremental``):
     what a full refresh ships and what one policy-committed incremental
@@ -67,12 +71,17 @@ class PlanContext:
 
     def inventory_for(self, cand: Candidate):
         """The candidate's device inventory: the setting's base inventory
-        re-geometried to the candidate's crossbar size."""
+        re-geometried to the candidate's crossbar size and rebuilt from
+        its compute-tier technology (the head tier is what the crossbar
+        mapper prices; the spoke storage tier only enters the per-device
+        energy model — see ``mapper_evaluator``)."""
         from repro.mapper import XbarInventory
         inv = self.inventory or XbarInventory.from_hardware(self.hw,
                                                             cand.setting)
         if cand.xbar_size is not None:
             inv = inv.with_xbar_size(cand.xbar_size)
+        if cand.head_technology != inv.technology:
+            inv = inv.with_technology(cand.head_technology)
         return inv
 
     def concrete_plan(self, cand: Candidate):
@@ -115,20 +124,36 @@ def mapper_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
     (DESIGN.md §8): derived compute latency, per-inference read energy,
     and fx schedule occupancy. Layer dims default to the calibration
     workload (feature_len → 128) exactly as ``costmodel`` does.
-    Memoized per (setting, n_clusters, xbar_size) — the compile is the
-    planner's most expensive model evaluation."""
-    key = ("mapper", cand.setting, cand.n_clusters, cand.xbar_size)
+    Memoized per (setting, n_clusters, xbar_size, technology) — the
+    compile is the planner's most expensive model evaluation.
+
+    ``energy_per_device_j`` is the technology-aware per-device energy
+    axis: the head tier's crossbar read energy plus — for semi, where the
+    spoke tier stores the features — one pass over the spoke's stored
+    feature cells at the *spoke* technology's read energy (how a
+    ``(reram, sram)`` pair gets billed for both of its tiers)."""
+    key = ("mapper", cand.setting, cand.n_clusters, cand.xbar_size,
+           cand.tech_key)
     if key in ctx.memo:
         return ctx.memo[key]
+    from repro.devices.bank import resolve_technology
     from repro.mapper.compile import compile_mapping
     dims = (max(ctx.stats.feature_len, 1), 128)
     m = compile_mapping(dims, ctx.stats, ctx.hw, ctx.inventory_for(cand),
                         cand.setting, cand.n_clusters,
                         sample=ctx.workload.sample)
+    energy_dev = m.energy_j
+    if cand.setting == "semi":
+        spoke = resolve_technology(cand.spoke_technology)
+        rows = -(-max(ctx.stats.n_nodes, 1) // max(cand.n_clusters, 1))
+        cells_per_elem = -(-8 // max(spoke.cell_bits, 1))
+        energy_dev += (rows * max(ctx.stats.feature_len, 1)
+                       * cells_per_elem * spoke.read_energy_j)
     ctx.memo[key] = {
         "t_compute_derived": m.t_compute,
         "t_compute_pipelined": m.t_compute_pipelined,
         "energy_j": m.energy_j,
+        "energy_per_device_j": energy_dev,
         "fx_occupancy": m.array_utilization[2],
         "weight_arrays": float(m.weight_arrays),
     }
@@ -162,6 +187,27 @@ def memory_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
         halo = max(halo, 0.0)
     ctx.memo[key] = {"device_bytes":
                      4.0 * (2 * rows * f + halo * f + 2 * rows * wl.sample)}
+    return ctx.memo[key]
+
+
+def accuracy_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
+    """Modeled accuracy bound of the candidate's compute-tier technology
+    under conductance variation (DESIGN.md §13): the closed-form p99
+    relative MVM output error at the candidate's aggregation geometry
+    (``devices.variation.modeled_p99_error`` — zero for noiseless SRAM).
+    The axis that pulls noisy-but-cheap technologies off the frontier and
+    the quantity ``WorkloadProfile.noise_tolerance`` gates on; the
+    Monte-Carlo bounds of ``benchmarks/tech_sweep.py`` ground it.
+    Memoized per (technology, xbar_size)."""
+    key = ("acc", cand.tech_key, cand.xbar_size)
+    if key in ctx.memo:
+        return ctx.memo[key]
+    from repro.devices.variation import modeled_p99_error
+    from repro.kernels.crossbar_mvm import CrossbarNumerics
+    inv = ctx.inventory_for(cand)
+    cfg = CrossbarNumerics(rows_per_xbar=inv.agg_rows)
+    ctx.memo[key] = {"noise_p99_model": modeled_p99_error(
+        cand.head_technology, max(ctx.stats.feature_len, 1), cfg)}
     return ctx.memo[key]
 
 
@@ -209,7 +255,8 @@ def traffic_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
     return out
 
 
-DEFAULT_EVALUATORS = (cost_evaluator, mapper_evaluator, memory_evaluator)
+DEFAULT_EVALUATORS = (cost_evaluator, mapper_evaluator, memory_evaluator,
+                      accuracy_evaluator)
 
 
 def evaluate(cand: Candidate, ctx: PlanContext,

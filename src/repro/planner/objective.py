@@ -95,15 +95,23 @@ def score(cand: Candidate, ctx: PlanContext, metrics: dict,
         raise ValueError(f"unknown objective {objective!r}; "
                          f"one of {OBJECTIVES}")
     if objective == "latency":
-        return effective_compute(metrics) + metrics.get("t_comm", 0.0)
-    if objective == "energy":
+        s = effective_compute(metrics) + metrics.get("t_comm", 0.0)
+    elif objective == "energy":
         base = metrics.get(
             "energy_j",
             metrics.get("p_compute", 0.0) * metrics.get("t_compute", 0.0))
-        return base + metrics.get("p_comm", 0.0) * metrics.get("t_comm", 0.0)
-    costs = tick_costs(cand, ctx, metrics)
-    s = costs["t_tick"]
-    slo = ctx.workload.slo_s
-    if slo is not None and costs["t_query_worst"] > slo:
-        s += _INFEASIBLE * (costs["t_query_worst"] - slo)
+        s = base + metrics.get("p_comm", 0.0) * metrics.get("t_comm", 0.0)
+    else:
+        costs = tick_costs(cand, ctx, metrics)
+        s = costs["t_tick"]
+        slo = ctx.workload.slo_s
+        if slo is not None and costs["t_query_worst"] > slo:
+            s += _INFEASIBLE * (costs["t_query_worst"] - slo)
+    # accuracy gate (all objectives): a technology whose modeled p99 MVM
+    # error exceeds the workload's noise tolerance stays comparable but
+    # never beats a feasible candidate — same shape as the SLO penalty
+    tol = ctx.workload.noise_tolerance
+    p99 = metrics.get("noise_p99_model", 0.0)
+    if tol is not None and p99 > tol:
+        s += _INFEASIBLE * (p99 - tol)
     return s

@@ -11,10 +11,12 @@ chain (``evaluate.evaluate``), scores it under the requested objective
     ``result.scored[0]`` — the self-consistency contract
     ``benchmarks/planner_sweep.py`` gates on;
   * ``frontier``    — the Pareto non-dominated set over (per-inference
-    latency, per-device energy, per-tick serving cost, modeled per-device
-    working-set bytes): the configs worth keeping when the objective
+    latency, per-device energy incl. the semi spoke storage tier,
+    per-tick serving cost, modeled per-device working-set bytes, modeled
+    p99 variation error): the configs worth keeping when the objective
     weighting is uncertain — the memory axis is what keeps the bucketed
-    layouts on the frontier (time/energy models cannot separate layouts);
+    layouts on the frontier (time/energy models cannot separate layouts),
+    the accuracy axis what keeps quiet-but-slow technologies on it;
   * ``recommended`` — the argmin under the objective, materializable via
     ``result.build_plan(graph)``.
 
@@ -57,12 +59,17 @@ class ScoredCandidate:
         return dict(setting=c.setting, backend=c.backend,
                     n_clusters=c.n_clusters,
                     xbar="paper" if c.xbar_size is None else c.xbar_size,
-                    policy=c.policy, layout=c.layout, score=self.score,
+                    policy=c.policy, layout=c.layout,
+                    technology=c.tech_key, score=self.score,
                     **{k: v for k, v in self.metrics.items()
                        if isinstance(v, (int, float))})
 
 
-_PARETO_AXES = ("t_net", "energy_j", "t_tick", "device_bytes")
+# per-device energy (not bare crossbar energy — the semi spoke storage tier
+# bills here too) and the modeled variation bound are the DESIGN.md §13
+# axes; a same-technology space is degenerate on the noise axis
+_PARETO_AXES = ("t_net", "energy_per_device_j", "t_tick", "device_bytes",
+                "noise_p99_model")
 
 
 def _dominates(a: dict, b: dict) -> bool:
@@ -75,7 +82,7 @@ def _dominates(a: dict, b: dict) -> bool:
 
 
 def pareto_frontier(scored: list) -> list:
-    """Non-dominated subset over (t_net, energy_j, t_tick), stable order."""
+    """Non-dominated subset over ``_PARETO_AXES``, stable order."""
     out = []
     for sc in scored:
         if not any(_dominates(o.metrics, sc.metrics) for o in scored

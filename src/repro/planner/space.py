@@ -48,6 +48,13 @@ class Candidate:
     ``layout`` picks the partition data plane: ``dense`` is the uniform
     n_max padding, ``bucketed`` the capacity-bucketed ragged layout
     (DESIGN.md §12) — numerically identical, cheaper device memory.
+    ``technology`` is the device-technology axis (DESIGN.md §13): a
+    registered name (``repro.devices.bank``) builds every tier from that
+    technology; a ``(spoke_tech, head_tech)`` pair — semi only — builds
+    the spoke storage tier and the compute-head tier from different ones
+    (e.g. dense ReRAM spokes under fast SRAM heads). Names are validated
+    lazily by the evaluators (``compile_mapping`` raises the registry's
+    named error), keeping this module dependency-light.
     """
     setting: str
     backend: str = "fused"
@@ -55,6 +62,7 @@ class Candidate:
     xbar_size: int | None = None
     policy: str = "eager"
     layout: str = "dense"
+    technology: str | tuple = "sot-mram"
 
     def __post_init__(self):
         if self.setting not in SETTINGS:
@@ -69,12 +77,44 @@ class Candidate:
             raise ValueError(f"n_clusters must be >= 1, got {self.n_clusters}")
         if self.setting == "centralized" and self.n_clusters != 1:
             raise ValueError("centralized implies n_clusters == 1")
+        if isinstance(self.technology, (tuple, list)):
+            object.__setattr__(self, "technology", tuple(self.technology))
+            if len(self.technology) != 2:
+                raise ValueError("a technology pair must be "
+                                 "(spoke_tech, head_tech)")
+            if self.setting != "semi":
+                raise ValueError("per-tier technology pairs require the "
+                                 "semi setting (spokes + heads)")
+        if not self.technology or not all(
+                isinstance(t, str) and t
+                for t in ((self.technology,)
+                          if isinstance(self.technology, str)
+                          else self.technology)):
+            raise ValueError(f"technology must be a non-empty name or a "
+                             f"pair of names, got {self.technology!r}")
+
+    @property
+    def spoke_technology(self) -> str:
+        """Storage-tier technology (= the single name when not a pair)."""
+        return (self.technology[0] if isinstance(self.technology, tuple)
+                else self.technology)
+
+    @property
+    def head_technology(self) -> str:
+        """Compute-tier technology — what the crossbar mapper prices."""
+        return (self.technology[1] if isinstance(self.technology, tuple)
+                else self.technology)
+
+    @property
+    def tech_key(self) -> str:
+        return ("+".join(self.technology)
+                if isinstance(self.technology, tuple) else self.technology)
 
     @property
     def key(self) -> str:
         xb = "paper" if self.xbar_size is None else str(self.xbar_size)
         return (f"{self.setting}/{self.backend}/k{self.n_clusters}"
-                f"/xb{xb}/{self.policy}/{self.layout}")
+                f"/xb{xb}/{self.policy}/{self.layout}/{self.tech_key}")
 
     def build_plan(self, graph, sample: int, seed: int = 0,
                    spokes_per_head: int = 4):
@@ -100,7 +140,12 @@ class WorkloadProfile:
     ``interval`` / ``max_staleness`` / ``max_dirty_frac`` — the refresh
     policies' parameters, mirroring ``StreamingGNNServer``'s;
     ``slo_s`` — optional per-query latency bound for the throughput
-    objective (a candidate whose queue wait exceeds it is infeasible).
+    objective (a candidate whose queue wait exceeds it is infeasible);
+    ``noise_tolerance`` — optional bound on the modeled p99 relative MVM
+    error under conductance variation (``devices.variation``): a
+    candidate whose technology's ``noise_p99_model`` exceeds it is
+    infeasible — how the planner rejects technologies whose noise breaks
+    the bit-accurate contract.
     """
     churn: float = 0.0
     edge_churn: int = 0
@@ -111,6 +156,7 @@ class WorkloadProfile:
     max_staleness: int = 8
     max_dirty_frac: float = 0.25
     slo_s: float | None = None
+    noise_tolerance: float | None = None
 
     def __post_init__(self):
         if not 0.0 <= self.churn <= 1.0:
@@ -119,6 +165,8 @@ class WorkloadProfile:
             raise ValueError("negative workload rates")
         if self.gnn_layers < 1 or self.sample < 1:
             raise ValueError("gnn_layers and sample must be >= 1")
+        if self.noise_tolerance is not None and self.noise_tolerance < 0:
+            raise ValueError("noise_tolerance must be >= 0")
 
     @property
     def mutating(self) -> bool:
@@ -163,7 +211,8 @@ def candidate_space(stats,
                     xbar_sizes: tuple = (None, 128, 256),
                     policies: tuple | None = None,
                     workload: WorkloadProfile | None = None,
-                    layouts: tuple = LAYOUTS) -> list:
+                    layouts: tuple = LAYOUTS,
+                    technologies: tuple = ("sot-mram",)) -> list:
     """Enumerate the candidate grid for one workload.
 
     Per-setting structure is respected: centralized pins ``n_clusters=1``;
@@ -174,6 +223,10 @@ def candidate_space(stats,
     workloads, so a query-only profile collapses them to ``eager``.
     Layouts only differentiate partitioned settings — centralized has one
     cluster and therefore one bucket, so it stays dense.
+
+    ``technologies`` entries are registered names or ``(spoke, head)``
+    pairs; pairs only make sense with two tiers, so they enumerate under
+    the semi setting only.
     """
     if policies is None:
         policies = (POLICIES if workload is not None and workload.mutating
@@ -189,11 +242,15 @@ def candidate_space(stats,
         else:
             ks = tuple(counts)
         lys = ("dense",) if setting == "centralized" else tuple(layouts)
+        techs = tuple(t for t in technologies
+                      if setting == "semi" or isinstance(t, str))
         for backend in backends:
             for k in ks:
                 for size in xbar_sizes:
                     for policy in policies:
                         for layout in lys:
-                            out.append(Candidate(setting, backend, k, size,
-                                                 policy, layout))
+                            for tech in techs:
+                                out.append(Candidate(setting, backend, k,
+                                                     size, policy, layout,
+                                                     tech))
     return out

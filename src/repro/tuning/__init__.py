@@ -1,8 +1,8 @@
 """Roofline-guided Pallas kernel autotuner (DESIGN.md §11).
 
 Block-size / pipeline-depth tuning for the ``fused_layer``,
-``crossbar_mvm`` and ``csr_aggregate`` kernels: enumerate legal
-candidates per launch geometry
+``crossbar_mvm``, ``csr_aggregate`` and ``cam_match`` kernels: enumerate
+legal candidates per launch geometry
 (``space``), prune them with the ``analysis/roofline.py`` bounds before
 anything is timed (``prune``), measure the survivors (``measure``), and
 cache the winner keyed by (geometry, platform) (``cache``) the way the
@@ -21,14 +21,16 @@ from . import registry  # noqa: F401
 from .autotune import current_platform, plan_geometries, tune, tune_plan
 from .cache import DEFAULT_CACHE_PATH, TuneCache
 from .prune import LaunchCost, launch_cost, prune, roofline_bound
-from .space import (AggregateConfig, AggregateGeometry, CrossbarConfig,
-                    CrossbarGeometry, FusedConfig, FusedGeometry,
+from .space import (AggregateConfig, AggregateGeometry, CamConfig,
+                    CamGeometry, CrossbarConfig, CrossbarGeometry,
+                    FusedConfig, FusedGeometry, GEOMETRY_TYPES,
                     TunedKernels, candidates, default_config)
 
 __all__ = [
     "registry", "current_platform", "plan_geometries", "tune", "tune_plan",
     "DEFAULT_CACHE_PATH", "TuneCache", "LaunchCost", "launch_cost", "prune",
-    "roofline_bound", "AggregateConfig", "AggregateGeometry",
-    "CrossbarConfig", "CrossbarGeometry", "FusedConfig",
-    "FusedGeometry", "TunedKernels", "candidates", "default_config",
+    "roofline_bound", "AggregateConfig", "AggregateGeometry", "CamConfig",
+    "CamGeometry", "CrossbarConfig", "CrossbarGeometry", "FusedConfig",
+    "FusedGeometry", "GEOMETRY_TYPES", "TunedKernels", "candidates",
+    "default_config",
 ]

@@ -59,15 +59,13 @@ class TuneCache:
 
         Yields (geometry key tuple, config) pairs for one platform; the
         key tuple is rebuilt from the stored geometry dict."""
-        from . import space
+        from .space import GEOMETRY_TYPES
         for rec in self.entries.values():
             if rec.get("platform") != platform:
                 continue
             gd = dict(rec["geometry"])
             gd.pop("kernel", None)
-            geom_cls = (space.FusedGeometry if rec["kernel"] == "fused_layer"
-                        else space.CrossbarGeometry)
-            geom = geom_cls(**gd)
+            geom = GEOMETRY_TYPES[rec["kernel"]](**gd)
             yield geom.key(), CONFIG_TYPES[rec["kernel"]](**rec["config"])
 
     # ---- deterministic persistence ---------------------------------------

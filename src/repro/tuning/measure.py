@@ -17,8 +17,9 @@ import time
 
 import numpy as np
 
-from .space import AggregateConfig, AggregateGeometry, CrossbarConfig, \
-    CrossbarGeometry, FusedConfig, FusedGeometry
+from .space import AggregateConfig, AggregateGeometry, CamConfig, \
+    CamGeometry, CrossbarConfig, CrossbarGeometry, FusedConfig, \
+    FusedGeometry
 
 
 def time_callable(fn, iters: int = 3, warmup: int = 1) -> float:
@@ -105,11 +106,31 @@ def aggregate_runner(geom: AggregateGeometry, config: AggregateConfig,
     return run
 
 
+def cam_runner(geom: CamGeometry, config: CamConfig, seed: int = 0,
+               interpret: bool | None = None):
+    """() -> (match, counts) for one CAM search launch at ``config``."""
+    import jax.numpy as jnp
+    from repro.kernels.cam_match import search
+
+    rng = np.random.default_rng(seed)
+    ci = jnp.asarray(rng.integers(0, max(geom.e, 1),
+                                  size=geom.e).astype(np.int32))
+    qs = jnp.asarray(rng.integers(0, max(geom.e, 1),
+                                  size=geom.q).astype(np.int32))
+
+    def run():
+        return search(ci, qs, backend="pallas", bq=config.bq, be=config.be,
+                      interpret=interpret)
+    return run
+
+
 def make_runner(geom, config, seed: int = 0, interpret: bool | None = None):
     if geom.kernel == "fused_layer":
         return fused_runner(geom, config, seed, interpret)
     if geom.kernel == "csr_aggregate":
         return aggregate_runner(geom, config, seed, interpret)
+    if geom.kernel == "cam_match":
+        return cam_runner(geom, config, seed, interpret)
     return crossbar_runner(geom, config, seed, interpret)
 
 

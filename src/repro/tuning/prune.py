@@ -26,8 +26,8 @@ import math
 
 from repro.analysis.roofline import HW, V5E, roofline_terms
 
-from .space import (AggregateGeometry, CrossbarGeometry, FusedGeometry,
-                    candidates)
+from .space import (AggregateGeometry, CamGeometry, CrossbarGeometry,
+                    FusedGeometry, candidates)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,11 +104,33 @@ def aggregate_cost(geom: AggregateGeometry, c) -> LaunchCost:
     return LaunchCost(flops, hbm, vmem, steps)
 
 
+def cam_cost(geom: CamGeometry, c) -> LaunchCost:
+    """Cost of one traversal CAM ``search`` launch at (bq, be).
+
+    The grid is (Q/bq, E/be): each step holds one int32 entry block and
+    one query block in VMEM, broadcasts the equality compare across the
+    bq x be tile (one VPU op per cell, plus the popcount reduce), and
+    writes the int8 match tile; the per-query counts accumulate in the
+    VMEM-resident (bq, 1) block across the E sweep (written once).
+    """
+    q = _ceil_to(geom.q, c.bq)
+    e = _ceil_to(geom.e, c.be)
+    steps = (q // c.bq) * (e // c.be)
+    flops = 2.0 * q * e                          # compare + popcount add
+    # entry blocks re-fetch once per query block row; query blocks once
+    # per entry block column; match written once, counts once per query
+    hbm = 4.0 * (steps * c.be + steps * c.bq + q) + 1.0 * q * e
+    vmem = (4.0 * (c.be + 2 * c.bq) + 1.0 * c.bq * c.be) * 2
+    return LaunchCost(flops, hbm, vmem, steps)
+
+
 def launch_cost(geom, config) -> LaunchCost:
     if geom.kernel == "fused_layer":
         return fused_cost(geom, config)
     if geom.kernel == "csr_aggregate":
         return aggregate_cost(geom, config)
+    if geom.kernel == "cam_match":
+        return cam_cost(geom, config)
     return crossbar_cost(geom, config)
 
 

@@ -16,6 +16,10 @@ tunable space:
     aggregation kernel the composed ``pallas`` backend launches (zero
     padding of F; the S-axis accumulation order never changes, so every
     candidate is bit-identical).
+  * ``cam_match`` — ``(bq, be)``: the query/entry block of the traversal
+    CAM search (sentinel padding of Q/E; every step is an independent
+    equality compare and the per-query popcount is an integer sum, so
+    every candidate is bit-identical).
 
 Candidate enumeration is deterministic and divisibility-aware; the
 roofline pruning and measurement live in ``prune.py`` / ``autotune.py``.
@@ -39,10 +43,15 @@ DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_DEPTH = 1
 
+DEFAULT_BQ = 8
+DEFAULT_BE = 128
+
 BF_CANDIDATES = (128, 256, 512)
 BM_CANDIDATES = (8, 16, 32, 64, 128, 256)
 BN_CANDIDATES = (128, 256, 512)
 DEPTH_CANDIDATES = (1, 2, 4)
+BQ_CANDIDATES = (8, 16, 32)
+BE_CANDIDATES = (128, 256, 512)
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -74,8 +83,18 @@ class AggregateConfig:
         return {"bf": self.bf}
 
 
+@dataclasses.dataclass(frozen=True, order=True)
+class CamConfig:
+    """One tunable point for the traversal ``cam_match`` search kernel."""
+    bq: int = DEFAULT_BQ          # query block (sublane axis)
+    be: int = DEFAULT_BE          # entry block (lane axis)
+
+    def as_dict(self) -> dict:
+        return {"bq": self.bq, "be": self.be}
+
+
 CONFIG_TYPES = {"crossbar_mvm": CrossbarConfig, "fused_layer": FusedConfig,
-                "csr_aggregate": AggregateConfig}
+                "csr_aggregate": AggregateConfig, "cam_match": CamConfig}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +172,31 @@ class AggregateGeometry:
                 "f": self.f, "sample": self.sample}
 
 
+@dataclasses.dataclass(frozen=True)
+class CamGeometry:
+    """Static signature of one traversal CAM ``search`` launch.
+
+    ``e`` is the CSR column-index (entry) length, ``q`` the query count —
+    the ops layer pads both with non-matching sentinels, so any (bq, be)
+    is legal."""
+    e: int
+    q: int
+
+    kernel = "cam_match"
+
+    def key(self) -> tuple:
+        return (self.kernel, self.e, self.q)
+
+    def as_dict(self) -> dict:
+        return {"kernel": self.kernel, "e": self.e, "q": self.q}
+
+
+GEOMETRY_TYPES = {"crossbar_mvm": CrossbarGeometry,
+                  "fused_layer": FusedGeometry,
+                  "csr_aggregate": AggregateGeometry,
+                  "cam_match": CamGeometry}
+
+
 def default_config(geom):
     return CONFIG_TYPES[geom.kernel]()
 
@@ -164,11 +208,15 @@ def candidates(geom) -> list:
     block multiples), but ``depth`` must divide the physical crossbar
     count ``n_k`` — the wrapper only pads K to ``rows_per_xbar``.
     fused_layer / csr_aggregate: any bf is legal (zero padding of F/H).
+    cam_match: any (bq, be) is legal (sentinel padding of Q/E).
     """
     if geom.kernel == "fused_layer":
         cands = [FusedConfig(bf) for bf in BF_CANDIDATES]
     elif geom.kernel == "csr_aggregate":
         cands = [AggregateConfig(bf) for bf in BF_CANDIDATES]
+    elif geom.kernel == "cam_match":
+        cands = [CamConfig(bq, be) for bq in BQ_CANDIDATES
+                 for be in BE_CANDIDATES]
     else:
         cands = [CrossbarConfig(bm, bn, d)
                  for bm in BM_CANDIDATES
