@@ -1,0 +1,262 @@
+"""Observability overhead gate: telemetry must be ~free and exactly right.
+
+Two contracts from DESIGN.md §14, both enforced here (the CI smoke gate):
+
+  1. **Overhead** — serving with telemetry enabled may cost at most
+     ``--threshold`` (default 1.05x == 5%) over telemetry-off on the
+     ``load_serve`` taxi configuration (decentralized/fused streaming
+     server, closed-loop queries with churn ticks interleaved). Off/on
+     trials alternate and each side takes its min over ``--repeats``
+     rounds, so one scheduler hiccup cannot decide the ratio; a failing
+     ratio gets one re-measure round before it counts.
+  2. **Exactness** — the span tree's shipped-bytes total must equal
+     ``ExecutionPlan.measured_traffic(...).total_bytes()`` *exactly* (not
+     approximately) on all three settings plus the bucketed layout. The
+     instrumentation bills bytes from the same executed send/recv tables
+     the exchange runs on (telemetry/instrument.py), so any inequality
+     means the accounting and the data plane have diverged.
+
+Also exports ``results/obs_metrics.jsonl`` + ``results/obs_trace.jsonl``
+(one serving trial's metrics dump and span trees) — the CI workflow
+uploads them as the ``obs-telemetry`` artifact.
+
+METRICS follows the determinism convention (benchmarks/run.py): the
+bytes-accounting rows are a pure function of seed+argv; measured
+wall-clock ratios live under ``"timing"``.
+
+Usage:
+  PYTHONPATH=src python benchmarks/obs_overhead.py            # full
+  PYTHONPATH=src python benchmarks/obs_overhead.py --smoke    # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro import telemetry as tel  # noqa: E402
+from repro.core import gnn  # noqa: E402
+from repro.core.graph import dataset_like  # noqa: E402
+from repro.core.partition import plan_execution  # noqa: E402
+from repro.streaming import StreamingGNNServer  # noqa: E402
+
+SMOKE_ARGV = ["--smoke"]
+METRICS: dict = {}
+
+# (setting, n_clusters, buckets) — the three paper settings plus the
+# bucketed ragged layout, whose per-bucket spans bill through a different
+# code path (distributed/halo.py) and must land on the same total
+BYTE_CASES = (
+    ("centralized", None, None),
+    ("decentralized", 4, None),
+    ("semi", 4, None),
+    ("decentralized", 4, "auto"),
+)
+
+
+def bytes_accounting(g, cfg, seed: int = 0) -> list:
+    """Run one forward per case under tracing; compare span-tree bytes
+    against the plan's own measured traffic report. Exact or bust."""
+    rows = []
+    for setting, n_clusters, buckets in BYTE_CASES:
+        plan = plan_execution(g, setting, backend=cfg.backend,
+                              sample=cfg.sample, n_clusters=n_clusters,
+                              seed=seed, buckets=buckets)
+        params = gnn.init_params(jax.random.key(seed), plan.gnn_config(cfg))
+        tel.reset()
+        tel.enable()
+        out = plan.make_forward(cfg)(params)
+        jax.block_until_ready(out)
+        span_bytes = sum(r.total_bytes() for r in tel.get_tracer().roots
+                         if r.name == "plan.forward")
+        measured = int(plan.measured_traffic(plan.gnn_config(cfg))
+                       .total_bytes())
+        snap = tel.snapshot()
+        counter_key = f'halo.shipped_bytes{{setting="{setting}"}}'
+        counter_bytes = int(snap["counters"].get(counter_key, 0))
+        rows.append(dict(setting=setting,
+                         layout="bucketed" if buckets else "dense",
+                         span_bytes=int(span_bytes),
+                         counter_bytes=counter_bytes,
+                         measured_bytes=measured,
+                         equal=bool(span_bytes == measured
+                                    and counter_bytes == measured)))
+        tel.reset()
+        tel.disable()
+    return rows
+
+
+def build_server(g, cfg, clusters: int, seed: int = 0) -> StreamingGNNServer:
+    plan = plan_execution(g, "decentralized", backend=cfg.backend,
+                          sample=cfg.sample, n_clusters=clusters, seed=seed)
+    srv = StreamingGNNServer(plan, dataclasses.replace(cfg,
+                                                       backend=cfg.backend),
+                             seed=seed, policy="eager")
+    srv.refresh()
+    return srv
+
+
+def serve_trial(srv, g, requests: int, batch: int, seed: int,
+                churn: float, tick_every: int) -> float:
+    """One closed-loop serving pass (queries + churn ticks), wall seconds.
+
+    Same seed => same mutation/query stream, so off/on trials do identical
+    work and differ only in the telemetry they pay for."""
+    rng = np.random.default_rng(seed)
+    out = None
+    t0 = time.perf_counter()
+    for i in range(requests):
+        if i % tick_every == 0:
+            n_mut = max(int(g.n_nodes * churn), 1)
+            nodes = rng.choice(g.n_nodes, n_mut, replace=False)
+            rows = rng.normal(size=(n_mut, g.feature_len)).astype(np.float32)
+            srv.ingest(nodes=nodes, rows=rows)
+        out = srv.query(rng.integers(0, g.n_nodes, batch))
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def measure_overhead(srv, g, requests: int, batch: int, repeats: int,
+                     churn: float, tick_every: int, seed: int = 0) -> dict:
+    """Alternating off/on trials; min per side is the comparison point."""
+    # warmup with telemetry ON: compiles every shape *and* triggers the
+    # instrumentation's lazy one-time costs (traffic billing cache), so
+    # neither side's measured trials pay first-call work
+    tel.reset()
+    tel.enable()
+    serve_trial(srv, g, requests, batch, seed, churn, tick_every)
+    off, on = [], []
+    for r in range(repeats):
+        tel.disable()
+        off.append(serve_trial(srv, g, requests, batch, seed, churn,
+                               tick_every))
+        tel.reset()
+        tel.enable()
+        on.append(serve_trial(srv, g, requests, batch, seed, churn,
+                              tick_every))
+    return dict(off=off, on=on)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config + hard asserts (the CI gate)")
+    ap.add_argument("--dataset", default="taxi")
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--churn", type=float, default=0.02)
+    ap.add_argument("--tick-every", type=int, default=4)
+    ap.add_argument("--clusters", type=int, default=4)
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="off/on trial pairs (default: 3 smoke, 5 full)")
+    ap.add_argument("--threshold", type=float, default=1.05,
+                    help="max telemetry-on/off wall-clock ratio (the "
+                         "DESIGN.md §14 overhead contract)")
+    ap.add_argument("--backend", default="fused")
+    ap.add_argument("--sample", type=int, default=8)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--out-dir", default="results",
+                    help="where obs_metrics.jsonl / obs_trace.jsonl land "
+                         "(the CI obs-telemetry artifact)")
+    args = ap.parse_args()
+
+    scale = 0.008 if args.smoke else args.scale
+    requests = 24 if args.smoke else args.requests
+    repeats = args.repeats or (3 if args.smoke else 5)
+    entry_enabled = tel.enabled()
+
+    g = dataset_like(args.dataset, scale=scale, seed=0).gcn_normalize()
+    cfg = gnn.GNNConfig(in_dim=g.feature_len, hidden_dims=(args.hidden,),
+                        out_dim=16, sample=args.sample,
+                        backend=args.backend)
+
+    # -- contract 2: span bytes == measured traffic, exactly ------------
+    byte_cfg = dataclasses.replace(cfg, backend="jnp")
+    byte_rows = bytes_accounting(g, byte_cfg)
+    print(f"{'setting':14s} {'layout':8s} {'span_bytes':>12s} "
+          f"{'measured':>12s}  equal")
+    for r in byte_rows:
+        print(f"{r['setting']:14s} {r['layout']:8s} {r['span_bytes']:12d} "
+              f"{r['measured_bytes']:12d}  {r['equal']}")
+    bytes_ok = all(r["equal"] for r in byte_rows)
+
+    # -- contract 1: <= threshold serving overhead ----------------------
+    srv = build_server(g, cfg, args.clusters)
+    trials = measure_overhead(srv, g, requests, args.batch, repeats,
+                              args.churn, args.tick_every)
+    remeasured = False
+    ratio = min(trials["on"]) / max(min(trials["off"]), 1e-12)
+    if ratio > args.threshold:
+        # one re-measure round before a noisy host fails the gate
+        remeasured = True
+        extra = measure_overhead(srv, g, requests, args.batch, 2,
+                                 args.churn, args.tick_every)
+        trials["off"] += extra["off"]
+        trials["on"] += extra["on"]
+        ratio = min(trials["on"]) / max(min(trials["off"]), 1e-12)
+    off_s, on_s = min(trials["off"]), min(trials["on"])
+    print(f"serving {requests} reqs x{args.batch}: off {off_s * 1e3:.1f}ms "
+          f"on {on_s * 1e3:.1f}ms ratio {ratio:.3f} "
+          f"(threshold {args.threshold:.2f}, "
+          f"{len(trials['off'])} trial pairs)")
+
+    # -- export the on-phase telemetry (CI artifact) --------------------
+    os.makedirs(args.out_dir, exist_ok=True)
+    metrics_path = os.path.join(args.out_dir, "obs_metrics.jsonl")
+    trace_path = os.path.join(args.out_dir, "obs_trace.jsonl")
+    tel.enable()   # exports describe the last telemetry-on trial
+    n_metrics = tel.export_metrics(metrics_path)
+    n_traces = tel.export_trace(trace_path)
+    print(f"exported {n_metrics} metric lines -> {metrics_path}, "
+          f"{n_traces} span trees -> {trace_path}")
+    if entry_enabled:
+        tel.enable()   # leave the on-phase data for run.py's info snapshot
+    else:
+        tel.reset()
+        tel.disable()
+
+    METRICS.clear()
+    METRICS.update(
+        dataset=args.dataset, n_nodes=g.n_nodes, requests=requests,
+        batch=args.batch, churn=args.churn, backend=args.backend,
+        repeats=repeats, threshold=args.threshold,
+        bytes_accounting=byte_rows, bytes_all_equal=bytes_ok,
+        timing=dict(off_s=off_s, on_s=on_s, overhead_frac=ratio - 1.0,
+                    trials_off=trials["off"], trials_on=trials["on"],
+                    remeasured=remeasured))
+
+    failures = []
+    if not bytes_ok:
+        failures += [f"{r['setting']}/{r['layout']}: span bytes "
+                     f"{r['span_bytes']} != measured {r['measured_bytes']}"
+                     for r in byte_rows if not r["equal"]]
+    if not any(r["measured_bytes"] > 0 for r in byte_rows):
+        failures.append("no case shipped any bytes — accounting untested")
+    if ratio > args.threshold:
+        failures.append(f"telemetry overhead {ratio:.3f}x exceeds "
+                        f"{args.threshold:.2f}x")
+    if n_traces < 1 or n_metrics < 1:
+        failures.append("telemetry exports are empty")
+    if failures:
+        print("OBS_OVERHEAD FAILURES:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print(f"OBS_OVERHEAD_OK: span bytes == measured traffic on "
+          f"{len(byte_rows)} cases; serving overhead "
+          f"{(ratio - 1) * 100:+.1f}% within "
+          f"{(args.threshold - 1) * 100:.0f}% budget")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -85,7 +85,9 @@ def discover(names: list | None = None) -> dict:
 
 # keys holding measured wall-clock (or equivalently volatile) values —
 # excluded from artifact determinism comparisons at any nesting depth
-VOLATILE_KEYS = frozenset({"timing", "seconds", "git_sha"})
+# ("info" carries the per-run telemetry snapshot: span timings and
+# counters are measurements, never compared)
+VOLATILE_KEYS = frozenset({"timing", "seconds", "git_sha", "info"})
 
 
 def canonical_metrics(obj, volatile: frozenset = VOLATILE_KEYS):
@@ -239,6 +241,18 @@ def run_one(name: str, mod, smoke: bool,
     if smoke:
         argv += list(getattr(mod, "SMOKE_ARGV", []))
     saved = sys.argv
+    # run every bench under telemetry so artifacts say where time went,
+    # not just totals; the snapshot lands under the record-level ``info``
+    # key, which --compare never inspects (it diffs argv + metrics only)
+    try:
+        from repro import telemetry
+    except ImportError:                              # pragma: no cover
+        telemetry = None
+    tel_was_enabled = False
+    if telemetry is not None:
+        tel_was_enabled = telemetry.enabled()
+        telemetry.reset()
+        telemetry.enable()
     t0 = time.perf_counter()
     try:
         sys.argv = argv
@@ -246,13 +260,19 @@ def run_one(name: str, mod, smoke: bool,
     finally:
         sys.argv = saved
     seconds = time.perf_counter() - t0
+    info = {}
+    if telemetry is not None:
+        info = {"telemetry": telemetry.snapshot()}
+        telemetry.reset()
+        if not tel_was_enabled:
+            telemetry.disable()
     # round-trip through JSON so in-memory records and ones re-read from
     # disk (the baselines --compare loads) are structurally identical
     # (tuples -> lists, numpy scalars -> str/float)
     record = json.loads(json.dumps(
         dict(bench=name, argv=argv[1:], smoke=smoke, returncode=rc,
              seconds=round(seconds, 3), git_sha=_git_sha(),
-             metrics=getattr(mod, "METRICS", {})), default=str))
+             metrics=getattr(mod, "METRICS", {}), info=info), default=str))
     if json_out:
         print(f"(wrote {write_record(record, json_out)})")
     if rc and getattr(mod, "INFORMATIONAL", False):

@@ -187,6 +187,25 @@ def tech_demo(sample: int) -> None:
           f"noise_tolerance 1e-4 flips it to {ct.head_technology}")
 
 
+def _dump_telemetry(args) -> None:
+    """Print the demo's span summary and export metrics/trace when asked
+    (DESIGN.md §14) — same flags the ``launch.gnn`` CLI takes."""
+    if not (args.metrics or args.trace):
+        return
+    from repro import telemetry
+    spans = telemetry.get_tracer().summary()
+    if spans:
+        print("telemetry spans (count, total ms):")
+        for name, s in spans.items():
+            print(f"  {name:24s} {s['count']:5d} {s['total_s'] * 1e3:9.2f}")
+    if args.metrics:
+        n = telemetry.export_metrics(args.metrics)
+        print(f"wrote {n} metric lines -> {args.metrics}")
+    if args.trace:
+        n = telemetry.export_trace(args.trace)
+        print(f"wrote {n} span trees -> {args.trace}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--clusters", type=int, default=0,
@@ -202,16 +221,33 @@ def main():
                     help="run the device-technology planning demo "
                          "(per-tier technology pick for the taxi mixed "
                          "workload; DESIGN.md §13)")
+    ap.add_argument("--metrics", metavar="PATH", default=None,
+                    help="enable telemetry; export counters/gauges/"
+                         "histograms as JSONL to PATH after the demo")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable telemetry; export span trees as JSONL "
+                         "to PATH after the demo")
     args = ap.parse_args()
 
-    if args.tech:
-        return tech_demo(args.sample)
-    if args.stream:
-        return stream_demo(args.stream, args.sample)
-    if args.buckets:
-        return bucketed_demo(args.sample,
-                             args.buckets if args.buckets == "auto"
-                             else int(args.buckets), args.clusters)
+    if args.metrics or args.trace:
+        from repro import telemetry
+        telemetry.enable()
+
+    try:
+        if args.tech:
+            return tech_demo(args.sample)
+        if args.stream:
+            return stream_demo(args.stream, args.sample)
+        if args.buckets:
+            return bucketed_demo(args.sample,
+                                 args.buckets if args.buckets == "auto"
+                                 else int(args.buckets), args.clusters)
+        _static_demo(args)
+    finally:
+        _dump_telemetry(args)
+
+
+def _static_demo(args) -> None:
 
     n_dev = len(jax.devices())
     k = args.clusters or n_dev

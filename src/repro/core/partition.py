@@ -591,7 +591,18 @@ class ExecutionPlan:
         exchange: ``overlap="overlap"`` dispatches every bucket's halo
         gather before any bucket's layer step so the sends overlap the MVMs;
         ``"serial"`` interleaves them (same values — DESIGN.md §12).
+
+        The returned callable carries telemetry instrumentation (a
+        ``plan.forward`` span with exact wire-byte accounting from this
+        plan's ``measured_traffic`` tables — DESIGN.md §14); with telemetry
+        disabled (the default) the wrapper is a single flag check.
         """
+        from repro.telemetry import instrument_forward
+        fwd = self._build_forward(cfg, mesh=mesh, mode=mode, overlap=overlap)
+        return instrument_forward(self, self.gnn_config(cfg), mode, fwd)
+
+    def _build_forward(self, cfg, mesh=None, mode: str = "alltoall",
+                       overlap: str = "overlap"):
         import jax.numpy as jnp
         from repro.core import gnn
         cfg = self.gnn_config(cfg)

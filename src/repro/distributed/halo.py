@@ -44,6 +44,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import telemetry as tel
 from repro.core.partition import (BucketedPartition, HierPartition,
                                   Partition)
 from repro.kernels.crossbar_mvm import crossbar_matmul_signed_ref
@@ -432,24 +433,38 @@ def make_emulated_bucketed_forward(cfg, bplan: BucketedHaloPlan,
     nb = bplan.n_buckets
 
     def forward(params, feats, nbrs, wtss):
+        # Spans here time *dispatch* (the loop body runs ahead of the
+        # device); telemetry.device_sync closes each layer only when
+        # tracing is enabled, so the overlap schedule is untouched when
+        # telemetry is off.  Disabled spans are shared no-op singletons.
+        tracer = tel.get_tracer()
         xs = list(feats)
         n_layers = len(params)
         for i, layer in enumerate(params):
             act = i < n_layers - 1 or cfg.final_activation
             flat = _flat_rows(*xs)
             if overlap == "overlap":
-                halos = [_gather_halo(flat, fidx[b], fmask[b])
-                         for b in range(nb)]
-                xs = [_bucket_layer(xs[b], halos[b], nbrs[b], wtss[b],
-                                    layer["w"], layer["b"], cfg=cfg,
-                                    act=act)
-                      for b in range(nb)]
+                halos = []
+                for b in range(nb):
+                    with tracer.span("halo.gather", layer=i, bucket=b):
+                        halos.append(_gather_halo(flat, fidx[b], fmask[b]))
+                xs_next = []
+                for b in range(nb):
+                    with tracer.span("halo.mvm", layer=i, bucket=b):
+                        xs_next.append(
+                            _bucket_layer(xs[b], halos[b], nbrs[b], wtss[b],
+                                          layer["w"], layer["b"], cfg=cfg,
+                                          act=act))
+                xs = xs_next
             else:
                 for b in range(nb):
-                    halo = _gather_halo(flat, fidx[b], fmask[b])
-                    xs[b] = _bucket_layer(xs[b], halo, nbrs[b], wtss[b],
-                                          layer["w"], layer["b"], cfg=cfg,
-                                          act=act)
+                    with tracer.span("halo.gather", layer=i, bucket=b):
+                        halo = _gather_halo(flat, fidx[b], fmask[b])
+                    with tracer.span("halo.mvm", layer=i, bucket=b):
+                        xs[b] = _bucket_layer(xs[b], halo, nbrs[b], wtss[b],
+                                              layer["w"], layer["b"],
+                                              cfg=cfg, act=act)
+            tracer.device_sync(xs, name="halo.layer_sync")
         return tuple(xs)
 
     return forward
@@ -489,8 +504,9 @@ def make_emulated_bucketed_semi_forward(cfg, bplan: BucketedHaloPlan,
                                            overlap=overlap)
 
     def forward(params, spoke_feats, nbrs, wtss):
-        feats = tuple(_tier0_bucket_gather(spoke_feats, cids, gs, sl, gm)
-                      for cids, gs, sl, gm in t0)
+        with tel.get_tracer().span("halo.tier0_gather", buckets=len(t0)):
+            feats = tuple(_tier0_bucket_gather(spoke_feats, cids, gs, sl, gm)
+                          for cids, gs, sl, gm in t0)
         return inner(params, feats, nbrs, wtss)
 
     return forward

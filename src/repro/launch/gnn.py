@@ -33,6 +33,7 @@ import time
 import jax
 import numpy as np
 
+from repro import telemetry as tel
 from repro.core import costmodel, dataset_like, gnn
 from repro.core.partition import ExecutionPlan, plan_execution
 from repro.launch.mesh import make_mesh
@@ -85,13 +86,14 @@ class GNNServer:
     def refresh(self) -> float:
         """Recompute all node embeddings; returns wall-clock seconds."""
         t0 = time.perf_counter()
-        if self._forward is None:
-            self._forward = self.plan.make_forward(self.cfg, mesh=self._mesh,
-                                                   mode=self.mode)
-        out = jax.block_until_ready(self._forward(self.params))
-        # bucketed plans return a tuple of ragged per-bucket tables;
-        # scatter handles both shapes (np.asarray would choke on a tuple)
-        self.embeddings = self.plan.scatter(out)
+        with tel.span("server.refresh", setting=self.plan.setting):
+            if self._forward is None:
+                self._forward = self.plan.make_forward(
+                    self.cfg, mesh=self._mesh, mode=self.mode)
+            out = jax.block_until_ready(self._forward(self.params))
+            # bucketed plans return a tuple of ragged per-bucket tables;
+            # scatter handles both shapes (np.asarray would choke on a tuple)
+            self.embeddings = self.plan.scatter(out)
         self.refreshes += 1
         self._served_version = self.version
         return time.perf_counter() - t0
@@ -104,15 +106,18 @@ class GNNServer:
         after ``update_plan`` to a smaller graph, stale ids fail loudly
         instead of wrapping); any batch shape gathers in one fancy index.
         """
-        if self.stale:
-            self.refresh()
-        ids = np.asarray(node_ids, np.int64)
-        n = len(self.embeddings)
-        if ids.size and (ids.min() < 0 or ids.max() >= n):
-            raise IndexError(
-                f"node ids must be in [0, {n}); batch spans "
-                f"[{ids.min()}, {ids.max()}]")
-        return self.embeddings[ids]
+        with tel.span("server.query"):
+            if self.stale:
+                self.refresh()
+            ids = np.asarray(node_ids, np.int64)
+            n = len(self.embeddings)
+            if ids.size and (ids.min() < 0 or ids.max() >= n):
+                raise IndexError(
+                    f"node ids must be in [0, {n}); batch spans "
+                    f"[{ids.min()}, {ids.max()}]")
+            out = self.embeddings[ids]
+            tel.counter("server.queries").inc(ids.size)
+        return out
 
 
 def stream_main(args, g, plan, cfg) -> None:
@@ -152,6 +157,16 @@ def stream_main(args, g, plan, cfg) -> None:
               f"{plan.measured_traffic(srv.cfg, mode=args.mode).total_bytes() * loop_commits / 1e6:.3f} MB)")
     print(f"served {served} lookups alongside the stream in "
           f"{dt * 1e3:.1f} ms")
+
+
+def _dump_telemetry(args) -> None:
+    """--metrics / --trace exit dumps (telemetry enabled in main)."""
+    if args.metrics:
+        n = tel.export_metrics(args.metrics)
+        print(f"telemetry: wrote {n} metric/event lines to {args.metrics}")
+    if args.trace:
+        n = tel.export_trace(args.trace)
+        print(f"telemetry: wrote {n} span trees to {args.trace}")
 
 
 def main() -> None:
@@ -207,7 +222,16 @@ def main() -> None:
                          "'reram+sram' bills ReRAM spoke storage under "
                          "SRAM cluster heads (semi setting); with "
                          "--plan auto the planner searches within it")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable telemetry; dump the metrics registry "
+                         "(counters/gauges/histograms + audit events) as "
+                         "JSONL to PATH on exit (DESIGN.md §14)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable telemetry; export the recorded span trees "
+                         "as JSONL to PATH on exit")
     args = ap.parse_args()
+    if args.metrics or args.trace:
+        tel.enable()
 
     tech = None
     if args.tech:
@@ -260,7 +284,8 @@ def main() -> None:
         print(f"autotuned {len(tuned)} kernel geometries "
               f"(cache: {cache.path}, {len(cache)} entries)")
     if args.stream:
-        return stream_main(args, g, plan, cfg)
+        stream_main(args, g, plan, cfg)
+        return _dump_telemetry(args)
     srv = GNNServer(plan, cfg, mesh=mesh, mode=args.mode)
 
     dt = srv.refresh()
@@ -299,6 +324,7 @@ def main() -> None:
     best, _ = costmodel.pick_setting(g.stats(args.dataset),
                                      n_clusters=plan.n_clusters)
     print(f"cost-model guideline for this graph: {best}")
+    _dump_telemetry(args)
 
 
 if __name__ == "__main__":

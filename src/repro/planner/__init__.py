@@ -24,6 +24,8 @@ exhaustive sweep of the planner's own evaluators; hybrid-vs-pure on the
 mixed workload) and ``benchmarks/load_serve.py`` (measured serving
 throughput / latency percentiles per config).
 """
+from repro.telemetry import CommitSample, DriftLedger, commit_sample
+
 from .evaluate import (DEFAULT_EVALUATORS, PlanContext, accuracy_evaluator,
                        cost_evaluator, evaluate, mapper_evaluator,
                        memory_evaluator, traffic_evaluator)
@@ -44,4 +46,5 @@ __all__ = [
     "PlannerResult", "ScoredCandidate", "pareto_frontier", "plan",
     "score_candidate",
     "ReplanEvent", "ReplanMonitor",
+    "CommitSample", "DriftLedger", "commit_sample",
 ]

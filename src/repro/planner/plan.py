@@ -34,6 +34,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.telemetry import event as telemetry_event
+
 from .evaluate import (DEFAULT_EVALUATORS, PlanContext, evaluate,
                        traffic_evaluator)
 from .objective import OBJECTIVES, score, tick_costs
@@ -186,5 +188,16 @@ def plan(graph_or_stats, objective: str = "latency",
                    for sc in scored[:shortlist]]
         scored = sorted(refined + scored[shortlist:],
                         key=lambda s: s.sort_key)
-    return PlannerResult(objective, workload, ctx, scored,
-                         pareto_frontier(scored))
+    result = PlannerResult(objective, workload, ctx, scored,
+                           pareto_frontier(scored))
+    # planner decision audit record (telemetry no-ops when disabled):
+    # enough to reconstruct *why* this plan is serving from an exported
+    # metrics dump alone (DESIGN.md §14)
+    telemetry_event(
+        "planner.plan", objective=objective,
+        recommended=result.recommended.candidate.key,
+        score=result.recommended.score, candidates=len(scored),
+        frontier=len(result.frontier), measured=graph is not None,
+        shortlist=shortlist, churn=workload.churn,
+        queries_per_tick=workload.queries_per_tick)
+    return result

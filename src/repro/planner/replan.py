@@ -2,9 +2,10 @@
 
 The planner's recommendation is a prediction; serving is the measurement.
 ``ReplanMonitor`` attaches to a ``StreamingGNNServer`` through its commit
-observer hook and, per committed tick, records measured commit wall-clock
-and incremental traffic bytes. Drift is declared when either signal's
-recent median leaves the tolerance band around its reference:
+observer hook and folds every committed tick into a typed
+``telemetry.DriftLedger`` (one :class:`~repro.telemetry.CommitSample` per
+commit — DESIGN.md §14).  Drift is declared when either signal's recent
+median leaves the tolerance band around its reference:
 
   * latency  — reference is the rolling baseline established over the
     first ``window`` commits (modeled crossbar/radio time and host
@@ -14,17 +15,25 @@ recent median leaves the tolerance band around its reference:
     when the traffic evaluator priced it, else the early-commit baseline.
 
 On drift the monitor re-estimates the workload from what the stream
-actually did (measured churn from the level-0 frontier masks, measured
+actually did (measured churn from the ledger's frontier series, measured
 query rate from the server's counters), re-runs ``plan`` on the live
 graph, and — when the recommendation's (setting, n_clusters, backend)
 differs from the serving config — builds the new ``ExecutionPlan`` and
 swaps it in via ``server.update_plan``. Every decision is appended to
-``self.events`` so the load harness can report re-plan behaviour.
+``self.events`` (and mirrored as a ``planner.replan`` telemetry audit
+event) so the load harness can report re-plan behaviour.
+
+``observe(sample, server=None)`` is the typed entry point: without a
+server the monitor runs in *shadow mode* — drift is detected and recorded
+(``swapped=False``, ``new == old``) but no re-plan/swap is attempted, so
+drift accounting can run against recorded samples or remote streams.
 """
 from __future__ import annotations
 
 import dataclasses
 import statistics
+
+from repro.telemetry import CommitSample, DriftLedger, commit_sample, event
 
 from .plan import PlannerResult, plan
 from .space import Candidate, WorkloadProfile
@@ -58,17 +67,12 @@ class ReplanMonitor:
         self.tol = float(tol)
         self.cooldown = max(int(cooldown), 1)
         self.shortlist = shortlist
-        self.seconds: list = []
-        self.bytes: list = []
-        self.churn: list = []
+        self.ledger = DriftLedger(
+            window=self.window,
+            predicted_bytes=result.recommended.metrics.get("bytes_per_tick"))
         self.queries_seen = 0
         self.events: list = []
-        self._baseline_s: float | None = None
         self._last_replan = -(10 ** 9)
-        # the policy the observed server actually commits under (refreshed
-        # on every commit): drift scaling must follow the real cadence,
-        # not the recommendation's, should the two ever diverge
-        self._server_policy: str | None = None
 
     # ---- wiring ---------------------------------------------------------
 
@@ -80,45 +84,80 @@ class ReplanMonitor:
     def serving(self) -> Candidate:
         return self.result.recommended.candidate
 
+    # legacy views of the ledger's series — load harnesses and tests read
+    # these; the ledger is the single source of truth
+    @property
+    def seconds(self) -> list:
+        return self.ledger.seconds
+
+    @property
+    def bytes(self) -> list:
+        return self.ledger.bytes
+
+    @property
+    def churn(self) -> list:
+        return self.ledger.churn
+
+    @property
+    def _baseline_s(self) -> float | None:
+        return self.ledger.baseline_s
+
+    @property
+    def _server_policy(self) -> str | None:
+        """The policy the observed server actually commits under (refreshed
+        on every commit): drift scaling must follow the real cadence, not
+        the recommendation's, should the two ever diverge."""
+        return self.ledger.policy
+
     # ---- observation ----------------------------------------------------
 
     def __call__(self, server, update) -> None:
-        if update.full:
-            # cold starts, param swaps, and bit-accurate degradations are
-            # full refreshes — not representative ticks; folding their
-            # wall-clock/traffic into the baseline would mask real drift
-            return
-        self._server_policy = getattr(server, "policy", None)
-        self.seconds.append(update.seconds)
-        self.bytes.append(float(update.traffic.total_bytes())
-                          if update.traffic is not None else 0.0)
-        self.churn.append(float(update.frontier.masks[0].mean()))
-        n = len(self.seconds)
-        if self._baseline_s is None and n >= self.window:
-            self._baseline_s = statistics.median(self.seconds[:self.window])
+        self.observe(commit_sample(server, update), server=server)
+
+    def observe(self, sample: CommitSample,
+                server=None) -> ReplanEvent | None:
+        """Fold one typed commit sample in; re-plan (or shadow-record) on
+        drift. Returns the ReplanEvent when this sample tripped one.
+
+        Full refreshes are skipped by the ledger: cold starts, param
+        swaps, and bit-accurate degradations are not representative ticks
+        — folding their wall-clock/traffic into the baseline would mask
+        real drift.
+        """
+        if not self.ledger.record(sample):
+            return None
+        if sample.queries:
+            self.queries_seen += int(sample.queries)
         drift = self._drift()
-        if drift is not None and n - self._last_replan >= self.cooldown:
-            self._last_replan = n
-            self._replan(server, *drift)
+        if drift is None or self.ledger.n - self._last_replan < self.cooldown:
+            return None
+        self._last_replan = self.ledger.n
+        if server is not None:
+            return self._replan(server, *drift)
+        # shadow mode: record the detection without a server to swap
+        reason, measured, reference = drift
+        ev = ReplanEvent(self.ledger.n, reason, measured, reference,
+                         self.serving, self.serving, False,
+                         self.measured_workload())
+        self.events.append(ev)
+        event("planner.drift", reason=reason, measured=measured,
+              reference=reference, serving=self.serving.key, shadow=True)
+        return ev
 
     def _drift(self) -> tuple | None:
         """(reason, measured, reference) when out of band, else None."""
-        if len(self.seconds) < 2 * self.window:
-            return None
-        recent_s = statistics.median(self.seconds[-self.window:])
-        if self._baseline_s and recent_s > self.tol * self._baseline_s:
-            return ("latency", recent_s, self._baseline_s)
+        lat = self.ledger.latency_drift(self.tol)
+        if lat is not None:
+            return ("latency", *lat)
         predicted = self.result.recommended.metrics.get("bytes_per_tick")
-        if predicted:
-            # the measured series is per *commit*; the prediction is per
-            # tick — scale it up by the serving policy's commit interval
-            # or every non-eager policy would look like steady-state drift
-            ref_b = predicted * max(self._commit_ticks(), 1)
-        else:
-            ref_b = statistics.median(self.bytes[:self.window])
-        recent_b = statistics.median(self.bytes[-self.window:])
-        if ref_b and recent_b > self.tol * ref_b:
-            return ("traffic", recent_b, ref_b)
+        # the measured series is per *commit*; the prediction is per tick —
+        # scale it up by the serving policy's commit interval or every
+        # non-eager policy would look like steady-state drift
+        ref_b = (predicted * max(self._commit_ticks(), 1)
+                 if predicted else None)
+        byt = self.ledger.bytes_drift(self.tol, reference=ref_b)
+        if byt is not None:
+            return ("traffic", *byt)
         return None
 
     # ---- decision -------------------------------------------------------
@@ -138,7 +177,7 @@ class ReplanMonitor:
         wl = self.result.workload
         ticks = self._commit_ticks()
         recent = self.churn[-self.window:] or [wl.churn * ticks]
-        commits = max(len(self.seconds), 1)
+        commits = max(self.ledger.n, 1)
         return dataclasses.replace(
             wl, churn=min(1.0, statistics.median(recent) / ticks),
             queries_per_tick=max(self.queries_seen / (commits * ticks),
@@ -150,9 +189,9 @@ class ReplanMonitor:
         self.queries_seen += int(n)
 
     def _replan(self, server, reason: str, measured: float,
-                reference: float) -> None:
+                reference: float) -> ReplanEvent:
         old = self.serving
-        at_commit = len(self.churn)
+        at_commit = self.ledger.n
         measured_wl = self.measured_workload()
         new_result = plan(server.plan.graph, self.result.objective,
                           workload=measured_wl,
@@ -172,17 +211,19 @@ class ReplanMonitor:
             server.max_staleness = measured_wl.max_staleness
             server.max_dirty_frac = measured_wl.max_dirty_frac
         self.result = new_result
+        self.ledger.predicted_bytes = \
+            new_result.recommended.metrics.get("bytes_per_tick")
         # the serving config changed: measured baselines describe the old
         # plan, so restart drift detection (and the cooldown clock, which
-        # counts the same list — leaving it at the pre-clear count would
+        # counts the same series — leaving it at the pre-clear count would
         # silently double the effective cooldown) from fresh observations
         if swap:
-            self.seconds.clear()
-            self.bytes.clear()
-            self.churn.clear()
+            self.ledger.reset()
             self.queries_seen = 0
-            self._baseline_s = None
             self._last_replan = 0
-        self.events.append(ReplanEvent(at_commit, reason, measured,
-                                       reference, old, new, swap,
-                                       measured_wl))
+        ev = ReplanEvent(at_commit, reason, measured, reference, old, new,
+                         swap, measured_wl)
+        self.events.append(ev)
+        event("planner.replan", reason=reason, measured=measured,
+              reference=reference, old=old.key, new=new.key, swapped=swap)
+        return ev

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as tel
 from repro.core.partition import (ExecutionPlan, _from_assignment,
                                   bucket_partition, build_bucketed_subgraphs,
                                   build_local_subgraphs,
@@ -136,6 +137,10 @@ class IncrementalEngine:
         #                                  per-bucket [K_b, n_cap, F_l])
         self.last_update: StreamingUpdate | None = None
         self.ticks = 0
+        # (layer, table_rows, padded_rows) triples seen by the dirty-rows
+        # recompute — each new triple is a fresh _rows_step specialization,
+        # the telemetry recompile-estimate counter's unit (DESIGN.md §14)
+        self._compiled_keys: set = set()
 
     # ---- layout helpers -------------------------------------------------
 
@@ -183,6 +188,10 @@ class IncrementalEngine:
 
         Caches are kept device-resident (jnp) so incremental ticks patch
         dirty rows in place instead of re-uploading whole tables."""
+        with tel.span("engine.full_refresh"):
+            return self._full_refresh_impl()
+
+    def _full_refresh_impl(self) -> float:
         t0 = time.perf_counter()
         nbr, wts = self.plan.neighbors, self.plan.weights
         if self._bp is not None:
@@ -348,6 +357,7 @@ class IncrementalEngine:
             return StreamingUpdate(fr, self._full_traffic(), secs, full=True)
         dirty_locals = np.stack([self._to_local(fr.masks[l])
                                  for l in range(l_total + 1)])
+        self._note_frontier(fr, dirty_locals)
         # level 0: patch mutated feature rows into the cached input table
         # (and the shared plan's feats tables, which track the live graph)
         self._sync_plan_feats(dirty_locals[0])
@@ -382,8 +392,31 @@ class IncrementalEngine:
         return StreamingUpdate(fr, traffic, time.perf_counter() - t0,
                                full=False)
 
+    def _note_frontier(self, fr: FrontierMasks,
+                       dirty_locals: np.ndarray) -> None:
+        """Dirty-fraction / cache-reuse accounting for one tick."""
+        reg = tel.get_registry()
+        if not reg.enabled:
+            return
+        recomputed = int(dirty_locals[1:].sum())
+        owned = (int(self.plan.part.local_mask.sum())
+                 if self.plan.part is not None else self.graph.n_nodes)
+        reg.counter("streaming.rows_recomputed").inc(recomputed)
+        reg.counter("streaming.rows_cached").inc(
+            max(self.n_layers * owned - recomputed, 0))
+        reg.gauge("streaming.dirty_fraction").set(
+            float(fr.recompute_fraction()))
+
+    def _note_compile(self, key: tuple) -> None:
+        """Count first-seen (layer, table_rows, padded_rows) shape triples —
+        each is one expected _rows_step JIT specialization."""
+        if key not in self._compiled_keys:
+            self._compiled_keys.add(key)
+            tel.counter("streaming.recompile_estimate").inc()
+
     def _refresh_dirty_dense(self, dirty_locals: np.ndarray,
                              l_total: int) -> None:
+        tracer = tel.get_tracer()
         nbr, wts = self.plan.neighbors, self.plan.weights
         n_max = dirty_locals.shape[2]
         for l in range(l_total):
@@ -402,15 +435,21 @@ class IncrementalEngine:
                 table = self._acts[l][c]
                 if hp is not None and (sub_nbr >= n_max).any():
                     # only pay the halo gather when a dirty row reads one
-                    halo = (self._acts[l][hp.src_cluster[c], hp.src_slot[c]]
-                            * jnp.asarray(hp.halo_mask[c].astype(
-                                np.float32))[:, None])
-                    table = jnp.concatenate([table, halo], axis=0)
-                out = _rows_step(table, jnp.asarray(sub_nbr),
-                                 jnp.asarray(sub_wts),
-                                 layer["w"], layer["b"], self.cfg, act)
-                self._acts[l + 1] = _scatter_rows(
-                    self._acts[l + 1], c, jnp.asarray(padded), out)
+                    with tracer.span("halo.gather", layer=l, cluster=c):
+                        halo = (self._acts[l][hp.src_cluster[c],
+                                              hp.src_slot[c]]
+                                * jnp.asarray(hp.halo_mask[c].astype(
+                                    np.float32))[:, None])
+                        table = jnp.concatenate([table, halo], axis=0)
+                self._note_compile((l, int(table.shape[0]), len(padded)))
+                with tracer.span("halo.mvm", layer=l, cluster=c,
+                                 rows=len(rows)):
+                    out = _rows_step(table, jnp.asarray(sub_nbr),
+                                     jnp.asarray(sub_wts),
+                                     layer["w"], layer["b"], self.cfg, act)
+                with tracer.span("cache.scatter", layer=l + 1, cluster=c):
+                    self._acts[l + 1] = _scatter_rows(
+                        self._acts[l + 1], c, jnp.asarray(padded), out)
 
     def _refresh_dirty_bucketed(self, dirty_locals: np.ndarray,
                                 l_total: int) -> None:
@@ -418,6 +457,7 @@ class IncrementalEngine:
         layout (owned rows are the members prefix in both), halo values via
         the bucketed flat gather, caches patched with the donated scatter."""
         bp = self._bp
+        tracer = tel.get_tracer()
         nbrs, wtss = self.plan.neighbors, self.plan.weights
         for l in range(l_total):
             layer = self.params[l]
@@ -438,16 +478,22 @@ class IncrementalEngine:
                 if (sub_nbr >= bp.n_caps[b]).any():
                     # only pay the flat build + halo gather when a dirty
                     # row actually reads a halo slot this layer
-                    if flat is None:
-                        flat = _flat_rows(*self._acts[l])
-                    halo = _gather_halo(flat, self._bfidx[b][j],
-                                        self._bfmask[b][j])
-                    table = jnp.concatenate([table, halo], axis=0)
-                out = _rows_step(table, jnp.asarray(sub_nbr),
-                                 jnp.asarray(sub_wts),
-                                 layer["w"], layer["b"], self.cfg, act)
-                self._acts[l + 1][b] = _scatter_rows(
-                    self._acts[l + 1][b], j, jnp.asarray(padded), out)
+                    with tracer.span("halo.gather", layer=l, bucket=b,
+                                     cluster=c):
+                        if flat is None:
+                            flat = _flat_rows(*self._acts[l])
+                        halo = _gather_halo(flat, self._bfidx[b][j],
+                                            self._bfmask[b][j])
+                        table = jnp.concatenate([table, halo], axis=0)
+                self._note_compile((l, b, int(table.shape[0]), len(padded)))
+                with tracer.span("halo.mvm", layer=l, bucket=b, cluster=c,
+                                 rows=len(rows)):
+                    out = _rows_step(table, jnp.asarray(sub_nbr),
+                                     jnp.asarray(sub_wts),
+                                     layer["w"], layer["b"], self.cfg, act)
+                with tracer.span("cache.scatter", layer=l + 1, bucket=b):
+                    self._acts[l + 1][b] = _scatter_rows(
+                        self._acts[l + 1][b], j, jnp.asarray(padded), out)
 
     def commit_full(self, delta: GraphDelta | None = None) -> StreamingUpdate:
         """Apply a buffer (optional) and rebuild every cache level — the

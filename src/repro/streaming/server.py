@@ -24,14 +24,19 @@ embeddings; ``flush()`` forces a commit.
 """
 from __future__ import annotations
 
+import logging
+
 import numpy as np
 
+from repro import telemetry as tel
 from repro.core.partition import ExecutionPlan
 from repro.launch.gnn import GNNServer
 from repro.streaming.delta import GraphDelta
 from repro.streaming.incremental import IncrementalEngine, StreamingUpdate
 
 POLICIES = ("eager", "interval", "bounded-staleness")
+
+_LOG = logging.getLogger(__name__)
 
 
 class StreamingGNNServer(GNNServer):
@@ -59,8 +64,20 @@ class StreamingGNNServer(GNNServer):
         self._reset_buffers()
 
     def add_observer(self, fn) -> None:
-        """Subscribe ``fn(server, update)`` to every committed tick."""
+        """Subscribe ``fn(server, update)`` to every committed tick.
+
+        Observer exceptions are isolated: a raising observer is logged and
+        skipped, never aborting the commit (the embeddings are already
+        swapped by the time observers run)."""
         self.observers.append(fn)
+
+    def remove_observer(self, fn) -> bool:
+        """Unsubscribe a commit observer; returns False when absent."""
+        try:
+            self.observers.remove(fn)
+            return True
+        except ValueError:
+            return False
 
     def _reset_buffers(self) -> None:
         n = self.engine.graph.n_nodes
@@ -85,6 +102,13 @@ class StreamingGNNServer(GNNServer):
         (dst, src) array pairs of edge events. Returns the
         ``StreamingUpdate`` when this tick triggered a commit, else None.
         """
+        with tel.span("server.ingest", policy=self.policy):
+            return self._ingest(x_t, nodes=nodes, rows=rows,
+                                add_edges=add_edges,
+                                remove_edges=remove_edges)
+
+    def _ingest(self, x_t=None, *, nodes=None, rows=None,
+                add_edges=None, remove_edges=None) -> StreamingUpdate | None:
         if x_t is not None:
             x_t = np.asarray(x_t, np.float32).reshape(self._live_feats.shape)
             changed = np.nonzero(np.any(x_t != self._live_feats, axis=1))[0]
@@ -134,25 +158,34 @@ class StreamingGNNServer(GNNServer):
 
     def _commit(self) -> StreamingUpdate:
         eng = self.engine
-        if eng._acts is None or self._served_version != self.version:
-            # cold start or params/plan moved: every cache level is invalid
-            eng.params = self.params
-            upd = eng.commit_full(self._pending)
-            self.full_refreshes += 1
-        else:
-            upd = eng.apply_delta(self._pending)
-            if upd.full:
+        with tel.span("server.commit", policy=self.policy) as sp:
+            if eng._acts is None or self._served_version != self.version:
+                # cold start or params/plan moved: every cache level is
+                # invalid
+                eng.params = self.params
+                upd = eng.commit_full(self._pending)
                 self.full_refreshes += 1
-        self._pending_ticks = 0
-        self._pending_dirty[:] = False
-        self._live_feats = eng.graph.features.copy()
-        self.embeddings = eng.embeddings()
+            else:
+                upd = eng.apply_delta(self._pending)
+                if upd.full:
+                    self.full_refreshes += 1
+            sp.set(full=upd.full)
+            tel.record_commit(upd, self.plan.setting)
+            self._pending_ticks = 0
+            self._pending_dirty[:] = False
+            self._live_feats = eng.graph.features.copy()
+            self.embeddings = eng.embeddings()
         self.commits += 1
         self.refreshes += 1
         self._served_version = self.version
         self.updates.append(upd)
-        for fn in self.observers:
-            fn(self, upd)
+        for fn in list(self.observers):
+            # observer isolation: a raising observer must not abort the
+            # commit — embeddings are already swapped; log and continue
+            try:
+                fn(self, upd)
+            except Exception:
+                _LOG.exception("commit observer %r raised; continuing", fn)
         return upd
 
     def refresh(self) -> float:

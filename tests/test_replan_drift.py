@@ -1,0 +1,175 @@
+"""ReplanMonitor drift paths through the typed telemetry interface
+(DESIGN.md §14): feed synthetic :class:`~repro.telemetry.CommitSample`
+streams into ``observe()`` in shadow mode (no server attached) and check
+exactly which samples trip which drift reason — latency vs the
+early-commit baseline, bytes vs the planner's prediction (and its
+early-median fallback), full-refresh skipping, and the steady state."""
+import pytest
+
+from repro.core.graph import TAXI_STATS
+from repro.planner import (Candidate, CommitSample, DriftLedger,
+                           ReplanMonitor, WorkloadProfile, plan)
+
+
+def _pinned(predicted_bytes=None):
+    """Model-only planner result on a single pinned candidate (no graph,
+    no traffic evaluator — ``bytes_per_tick`` only when injected)."""
+    wl = WorkloadProfile(churn=0.05, queries_per_tick=8, sample=4)
+    result = plan(TAXI_STATS, "throughput", workload=wl,
+                  space=[Candidate("decentralized", "jnp", 3)])
+    assert "bytes_per_tick" not in result.recommended.metrics
+    if predicted_bytes is not None:
+        result.recommended.metrics["bytes_per_tick"] = predicted_bytes
+    return result
+
+
+def _monitor(predicted_bytes=None, **kw):
+    kw.setdefault("window", 2)
+    kw.setdefault("tol", 2.0)
+    kw.setdefault("cooldown", 1)
+    return ReplanMonitor(_pinned(predicted_bytes), **kw)
+
+
+def _sample(seconds=0.01, shipped=1000.0, churn=0.05, full=False,
+            queries=8):
+    return CommitSample(seconds=seconds, shipped_bytes=shipped,
+                        churn_frac=churn, full=full, queries=queries,
+                        policy="eager")
+
+
+# ---- path 1: latency drift ----------------------------------------------
+
+def test_latency_drift_trips_in_shadow_mode():
+    mon = _monitor()
+    # window=2 fast commits: baseline_s = 0.01; no drift check until
+    # 2*window samples exist (baseline and recent windows never overlap)
+    assert mon.observe(_sample(seconds=0.01)) is None
+    assert mon.observe(_sample(seconds=0.01)) is None
+    assert mon.ledger.baseline_s == pytest.approx(0.01)
+    ev = None
+    for _ in range(2):
+        ev = ev or mon.observe(_sample(seconds=0.05))
+    assert ev is not None and ev.reason == "latency"
+    assert ev.measured == pytest.approx(0.05)
+    assert ev.reference == pytest.approx(0.01)
+    assert ev.measured > mon.tol * ev.reference
+    # shadow mode: detection only — nothing to swap to, nothing swapped
+    assert not ev.swapped and ev.new is ev.old is mon.serving
+    assert mon.events == [ev]
+
+
+def test_latency_drift_replan_event_carries_measured_workload():
+    mon = _monitor()
+    for s in (0.01, 0.01, 0.08, 0.08):
+        ev = mon.observe(_sample(seconds=s, churn=0.4, queries=40))
+    # the shadow event reports the workload the re-plan *would* use:
+    # per-tick churn from the ledger's frontier series, measured queries
+    assert ev.workload.churn == pytest.approx(0.4)
+    assert ev.workload.queries_per_tick >= 10
+
+
+# ---- path 2: bytes drift ------------------------------------------------
+
+def test_bytes_drift_trips_against_predicted_reference():
+    mon = _monitor(predicted_bytes=1000.0)
+    # constant latency so only the traffic signal can trip
+    assert mon.observe(_sample(shipped=1000.0)) is None
+    assert mon.observe(_sample(shipped=1000.0)) is None
+    ev = None
+    for _ in range(2):
+        ev = ev or mon.observe(_sample(shipped=9000.0))
+    assert ev is not None and ev.reason == "traffic"
+    assert ev.measured == pytest.approx(9000.0)
+    # eager policy: one tick per commit, the prediction is used unscaled
+    assert ev.reference == pytest.approx(1000.0)
+    assert not ev.swapped
+
+
+def test_bytes_drift_falls_back_to_early_median_without_prediction():
+    mon = _monitor(predicted_bytes=None)
+    for _ in range(2):
+        assert mon.observe(_sample(shipped=500.0)) is None
+    ev = None
+    for _ in range(2):
+        ev = ev or mon.observe(_sample(shipped=5000.0))
+    assert ev is not None and ev.reason == "traffic"
+    assert ev.reference == pytest.approx(500.0)   # median of first window
+
+
+def test_bytes_within_band_does_not_trip():
+    mon = _monitor(predicted_bytes=1000.0)
+    for _ in range(8):
+        assert mon.observe(_sample(shipped=1500.0)) is None   # 1.5x < tol
+    assert not mon.events
+
+
+# ---- path 3: full refreshes are skipped ---------------------------------
+
+def test_full_refresh_samples_are_skipped_not_folded():
+    mon = _monitor()
+    assert mon.observe(_sample(full=True, seconds=9.9)) is None
+    assert mon.ledger.n == 0 and mon.ledger.full_skipped == 1
+    assert mon.ledger.baseline_s is None
+    # a cold start's 9.9s never contaminates the baseline: the quiet
+    # stream that follows establishes it from representative ticks only
+    for _ in range(4):
+        assert mon.observe(_sample(seconds=0.01)) is None
+    assert mon.ledger.baseline_s == pytest.approx(0.01)
+    assert mon.ledger.full_skipped == 1
+    assert not mon.events
+    rep = mon.ledger.report()
+    assert rep["commits"] == 4 and rep["full_skipped"] == 1
+
+
+# ---- path 4: steady state never trips -----------------------------------
+
+def test_steady_state_stays_quiet():
+    mon = _monitor(predicted_bytes=1000.0)
+    for _ in range(20):
+        assert mon.observe(_sample()) is None
+    assert not mon.events
+    rep = mon.ledger.report()
+    assert rep["commits"] == 20
+    assert rep["recent_s"] == pytest.approx(0.01)
+    assert rep["bytes_vs_predicted"] == pytest.approx(1.0)
+
+
+# ---- supporting contracts ------------------------------------------------
+
+def test_drift_event_mirrored_to_telemetry_audit_log():
+    from repro import telemetry as tel
+    tel.reset()
+    tel.enable()
+    try:
+        mon = _monitor()
+        for s in (0.01, 0.01, 0.05, 0.05):
+            mon.observe(_sample(seconds=s))
+        drift_events = [e for e in tel.get_registry().events
+                        if e["event"] == "planner.drift"]
+        assert len(drift_events) == 1
+        assert drift_events[0]["reason"] == "latency"
+        assert drift_events[0]["shadow"] is True
+    finally:
+        tel.reset()
+        tel.disable()
+
+
+def test_cooldown_suppresses_repeat_detections():
+    mon = _monitor(cooldown=50)
+    for s in (0.01, 0.01, 0.05, 0.05):
+        mon.observe(_sample(seconds=s))
+    assert len(mon.events) == 1
+    for _ in range(10):                    # still drifting, still cooling
+        assert mon.observe(_sample(seconds=0.05)) is None
+    assert len(mon.events) == 1
+
+
+def test_ledger_reset_restarts_accounting():
+    led = DriftLedger(window=2, predicted_bytes=100.0)
+    for _ in range(4):
+        led.record(CommitSample(0.01, 100.0, 0.1))
+    assert led.n == 4 and led.baseline_s is not None
+    led.reset()
+    assert led.n == 0 and led.baseline_s is None
+    assert led.latency_drift(2.0) is None and led.bytes_drift(2.0) is None
+    assert led.predicted_bytes == 100.0    # predictions survive the reset
