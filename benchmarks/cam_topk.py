@@ -1,0 +1,187 @@
+"""CAM-vs-top-k neighbor selection: parity gate, timings, planner pricing.
+
+The CAM consumers (DESIGN.md §15) promise *result-identical* fallbacks:
+k-NN graph construction over LSH band signatures (``repro.neighbors``)
+and dirty-frontier membership (``streaming.frontier``) must produce the
+same edges / the same masks whether they run on the traversal CAM kernel
+(jnp oracle or Pallas) or the host sort/top-k path. This bench gates that
+equivalence and reports where each path spends its time:
+
+  * **k-NN parity** — for each feature-similarity scenario
+    (``recsys`` / ``anomaly``) the graph is built three ways —
+    ``topk`` (host fallback), ``cam-jnp``, ``cam-pallas`` — and the CSR
+    triples must match bit-for-bit; per-path wall-clocks land under
+    ``timing`` keys (the runner's determinism convention).
+  * **Frontier parity** — random dirty sets expanded through the padded
+    sample on all ``FRONTIER_MODES``; masks must be bit-identical
+    (pad slots and the negative-query contract included).
+  * **Planner pricing** — the taxi mixed churn+query workload planned
+    with the ``neighbor_mode`` axis: the recommendation (visible in
+    ``planner_sweep`` too) plus the per-commit ``t_neighbor_s`` the
+    ``neighbor_evaluator`` assigns each mode of the recommended
+    candidate — the modeled CAM-vs-drain tradeoff (CAM wins while the
+    dirty-id count stays under one array's depth).
+
+Usage:
+  PYTHONPATH=src python benchmarks/cam_topk.py            # full sizes
+  PYTHONPATH=src python benchmarks/cam_topk.py --smoke    # CI gate
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.core.graph import TAXI_STATS, random_graph  # noqa: E402
+from repro.neighbors import SCENARIOS, scenario_features  # noqa: E402
+from repro.neighbors import knn_graph  # noqa: E402
+from repro.planner import (WorkloadProfile, neighbor_evaluator,  # noqa: E402
+                           plan)
+from repro.streaming.frontier import (FRONTIER_MODES,  # noqa: E402
+                                      expand_frontier)
+
+SMOKE_ARGV = ["--smoke"]
+METRICS: dict = {}              # filled by main(); run.py --json-out reads it
+
+# (mode, backend) -> display label: the three scoring paths under parity
+PATHS = (("topk", "jnp", "topk"),
+         ("cam", "jnp", "cam-jnp"),
+         ("cam", "pallas", "cam-pallas"))
+
+
+def _time_ms(fn, iters: int) -> float:
+    fn()                                    # warm (jit/trace) once
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / max(iters, 1) * 1e3
+
+
+def knn_rows(n: int, f: int, k: int, iters: int) -> tuple:
+    """Per-scenario parity + timing rows; (rows, all_parities_held)."""
+    rows, all_ok = [], True
+    for name in SCENARIOS:
+        x, _ = scenario_features(name, n_nodes=n, feature_len=f, seed=0)
+        built = {label: knn_graph(x, k=k, mode=mode, backend=backend)
+                 for mode, backend, label in PATHS}
+        ref = built["topk"]
+        ok = all(np.array_equal(g.indptr, ref.indptr)
+                 and np.array_equal(g.indices, ref.indices)
+                 and np.array_equal(g.edge_weight, ref.edge_weight)
+                 for g in built.values())
+        all_ok &= ok
+        timing = {label: round(_time_ms(
+            lambda m=mode, b=backend: knn_graph(x, k=k, mode=m, backend=b),
+            iters), 3) for mode, backend, label in PATHS}
+        rows.append(dict(scenario=name, n_nodes=n, k=k,
+                         edges=int(ref.n_edges),
+                         mean_weight=round(float(ref.edge_weight.mean()), 6),
+                         parity=bool(ok), timing=timing))
+    return rows, all_ok
+
+
+def frontier_rows(n: int, e: int, sample: int, layers: int,
+                  iters: int) -> tuple:
+    """Frontier-mask bit-identity across FRONTIER_MODES + timings."""
+    g = random_graph(n, e, 8, seed=2)
+    nbr, wts = g.neighbor_sample(sample)
+    rng = np.random.default_rng(3)
+    rows, all_ok = [], True
+    for dirty_frac in (0.02, 0.25):
+        fd = rng.random(n) < dirty_frac
+        sd = rng.random(n) < dirty_frac / 2
+        masks = {m: expand_frontier(nbr, wts, fd, sd, layers, mode=m)
+                 for m in FRONTIER_MODES}
+        ref = masks["numpy"]
+        ok = all(np.array_equal(fm.masks, ref.masks)
+                 for fm in masks.values())
+        all_ok &= ok
+        timing = {m: round(_time_ms(
+            lambda m=m: expand_frontier(nbr, wts, fd, sd, layers, mode=m),
+            iters), 3) for m in FRONTIER_MODES}
+        rows.append(dict(n_nodes=n, sample=sample, layers=layers,
+                         dirty_frac=dirty_frac,
+                         dirty_rows=[int(c) for c in ref.counts()],
+                         parity=bool(ok), timing=timing))
+    return rows, all_ok
+
+
+def planner_pricing() -> dict:
+    """Plan the taxi mixed workload; price both neighbor modes of the
+    recommendation — the modeled CAM-vs-serial-drain tradeoff."""
+    wl = WorkloadProfile(churn=0.01, queries_per_tick=64, sample=8)
+    result = plan(TAXI_STATS, "throughput", workload=wl)
+    rec = result.recommended
+    out = dict(recommended=rec.candidate.key,
+               neighbor_mode=rec.candidate.neighbor_mode,
+               score=rec.score)
+    for nm in ("cam", "topk"):
+        twin = dataclasses.replace(rec.candidate, neighbor_mode=nm)
+        out[f"t_neighbor_{nm}_s"] = \
+            neighbor_evaluator(twin, result.ctx)["t_neighbor_s"]
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes, single timing iteration (CI gate)")
+    args = ap.parse_args()
+    if args.smoke:
+        n, f, k, iters = 96, 16, 5, 1
+        fn, fe, sample, layers = 160, 800, 6, 2
+    else:
+        n, f, k, iters = 256, 32, 8, 3
+        fn, fe, sample, layers = 512, 2600, 8, 3
+
+    knn, knn_ok = knn_rows(n, f, k, iters)
+    print(f"{'scenario':10s} {'edges':>6s} {'parity':>7s} "
+          + " ".join(f"{lb + ' ms':>14s}" for _, _, lb in PATHS))
+    for r in knn:
+        print(f"{r['scenario']:10s} {r['edges']:6d} "
+              f"{'yes' if r['parity'] else 'NO':>7s} "
+              + " ".join(f"{r['timing'][lb]:14.3f}" for _, _, lb in PATHS))
+
+    fr, fr_ok = frontier_rows(fn, fe, sample, layers, iters)
+    print(f"\n{'dirty_frac':>10s} {'levels':>16s} {'parity':>7s} "
+          + " ".join(f"{m + ' ms':>14s}" for m in FRONTIER_MODES))
+    for r in fr:
+        print(f"{r['dirty_frac']:10.2f} {str(r['dirty_rows']):>16s} "
+              f"{'yes' if r['parity'] else 'NO':>7s} "
+              + " ".join(f"{r['timing'][m]:14.3f}"
+                         for m in FRONTIER_MODES))
+
+    pricing = planner_pricing()
+    print(f"\nplanner[throughput] taxi mixed workload -> "
+          f"{pricing['recommended']}")
+    print(f"  per-commit membership pass: cam "
+          f"{pricing['t_neighbor_cam_s']:.3e} s vs topk "
+          f"{pricing['t_neighbor_topk_s']:.3e} s "
+          f"(mode picked: {pricing['neighbor_mode']})")
+
+    METRICS.update(knn=knn, frontier=fr, planner=pricing)
+    failures = []
+    if not knn_ok:
+        failures.append("k-NN edge lists diverge across CAM/top-k paths")
+    if not fr_ok:
+        failures.append("frontier masks diverge across modes")
+    if not (pricing["t_neighbor_cam_s"] > 0
+            and pricing["t_neighbor_topk_s"] > 0):
+        failures.append("neighbor_evaluator priced a mode at zero")
+    if failures:
+        print("CAM_TOPK_FAIL: " + "; ".join(failures))
+        return 1
+    print(f"\nCAM_TOPK_OK: {len(knn)} scenario graphs identical on "
+          f"{len(PATHS)} paths; {len(fr)} frontier sweeps bit-identical on "
+          f"{len(FRONTIER_MODES)} modes; planner prices both neighbor "
+          f"modes")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -144,7 +144,7 @@ def main() -> int:
         cent = r["pure_scores"]["centralized"]
         dec = r["pure_scores"]["decentralized"]
         key = (f"{rec['setting']}/k{rec['n_clusters']}/xb{rec['xbar']}"
-               f"/{rec['policy']}")
+               f"/{rec['policy']}/{rec['neighbor_mode']}")
         print(f"{name:12s} {key:42s} {rec['score']:10.3e} "
               f"{cent / rec['score']:7.1f}x {dec / rec['score']:7.1f}x "
               f"{'yes' if r['self_consistent'] else 'NO':>9s}")

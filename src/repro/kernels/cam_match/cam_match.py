@@ -40,7 +40,16 @@ def cam_search(ci: jax.Array, queries: jax.Array, bq: int = 8, be: int = 128,
     interpret = resolve_interpret(interpret)
     e, = ci.shape
     q, = queries.shape
-    assert e % be == 0 and q % bq == 0, (e, be, q, bq)
+    for dim, size, mult in (("E", e, be), ("Q", q, bq)):
+        if size % mult:
+            raise ValueError(
+                f"cam_search needs {dim} divisible by "
+                f"{'be' if dim == 'E' else 'bq'}={mult} (one "
+                f"{'entry' if dim == 'E' else 'query'} block per grid "
+                f"step), got {dim}={size}. Use "
+                f"repro.kernels.cam_match.search — the ops layer pads "
+                f"E/Q to the block multiples with non-matching sentinels "
+                f"for arbitrary shapes.")
     grid = (q // bq, e // be)
     match, counts = pl.pallas_call(
         _kernel,

@@ -21,6 +21,16 @@ DEFAULT_BQ = 8
 DEFAULT_BE = 128
 
 
+def _validate_blocks(bq, be) -> None:
+    """Explicit blocks must be positive — ``bq=0`` is a caller bug, not a
+    request for the default (the falsy-``or`` resolution this replaces
+    silently substituted DEFAULT_BQ)."""
+    for name, val in (("bq", bq), ("be", be)):
+        if val is not None and int(val) < 1:
+            raise ValueError(f"{name} must be a positive block size, got "
+                             f"{val!r} (pass None to resolve tuned/default)")
+
+
 def _resolve_blocks(ci, queries, bq, be, tuned) -> tuple:
     if bq is not None and be is not None:
         return int(bq), int(be)
@@ -50,7 +60,11 @@ def _search(ci: jax.Array, queries: jax.Array, backend: str,
     q_p = jnp.pad(queries, (0, pq), constant_values=-2)
     match, counts = _pallas_search(ci_p, q_p, bq=bq, be=be,
                                    interpret=interpret)
-    return match[:q, :e], counts[:q, 0]
+    # negative queries match nothing (ref.cam_search_ref's contract): the
+    # raw equality kernel would let a -1 query activate every -1 pad slot
+    valid = (queries >= 0)
+    match = match[:q, :e] * valid[:, None].astype(jnp.int8)
+    return match, counts[:q, 0] * valid.astype(jnp.int32)
 
 
 def search(ci: jax.Array, queries: jax.Array, backend: str = "jnp",
@@ -58,15 +72,21 @@ def search(ci: jax.Array, queries: jax.Array, backend: str = "jnp",
            interpret: bool | None = None):
     """Match queries against the CSR column-index array.
 
-    Returns (match [Q, E] int8, counts [Q] int32). Pads E/Q internally; pad
-    edges use sentinel -1 (never a valid node id) so they can't match.
-    Block resolution is eager (outside jit) so the blocks are static args
-    of the underlying kernel launch.
+    Returns (match [Q, E] int8, counts [Q] int32). Pads E/Q internally;
+    pad *edge* slots use sentinel -1 and pad *query* slots -2, and
+    negative query ids match nothing by contract on both backends (valid
+    node ids are non-negative, so a -1 query — a plausible upstream
+    invalid-slot encoding — returns an all-zero row and count 0 instead
+    of activating every pad slot). Block resolution is eager (outside
+    jit) so the blocks are static args of the underlying kernel launch;
+    an explicit non-positive block raises (it is not a default request).
     """
+    _validate_blocks(bq, be)
     if backend == "pallas":
         bq, be = _resolve_blocks(ci, queries, bq, be, tuned)
     else:
-        bq, be = bq or DEFAULT_BQ, be or DEFAULT_BE
+        bq = DEFAULT_BQ if bq is None else int(bq)
+        be = DEFAULT_BE if be is None else int(be)
     return _search(ci, queries, backend, bq, be, interpret)
 
 

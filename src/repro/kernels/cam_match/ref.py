@@ -15,9 +15,11 @@ def cam_search_ref(ci: jax.Array, queries: jax.Array):
     """ci: [E] int32 CSR column indices; queries: [Q] int32 node ids.
 
     Returns (match [Q, E] int8, counts [Q] int32) — the match-line bitmap of
-    the search CAM and the per-query activation count.
+    the search CAM and the per-query activation count. Negative query ids
+    (plausible upstream invalid-slot encodings) match nothing: valid node
+    ids are non-negative, and a -1 query must not activate -1 pad slots.
     """
-    match = (ci[None, :] == queries[:, None])
+    match = (ci[None, :] == queries[:, None]) & (queries >= 0)[:, None]
     return match.astype(jnp.int8), match.sum(axis=1).astype(jnp.int32)
 
 

@@ -24,6 +24,14 @@ from .ref import csr_aggregate_ref
 DEFAULT_BF = 128
 
 
+def _validate_bf(bf) -> None:
+    """An explicit ``bf=0`` is a caller bug, not a default request — the
+    falsy-``or`` resolution this replaces silently substituted DEFAULT_BF."""
+    if bf is not None and int(bf) < 1:
+        raise ValueError(f"bf must be a positive feature block size, got "
+                         f"{bf!r} (pass None to resolve tuned/default)")
+
+
 def _resolve_bf(x, neighbors, bf, tuned) -> int:
     if bf is not None:
         return int(bf)
@@ -62,6 +70,9 @@ def aggregate(x: jax.Array, neighbors: jax.Array, weights: jax.Array,
     ``repro.tuning.TunedKernels``), then the registry, then 128 — shape
     resolution is eager (outside jit) so the block size is a static arg of
     the underlying kernel launch."""
-    bf = _resolve_bf(x, neighbors, bf, tuned) if backend == "pallas" else (
-        bf or DEFAULT_BF)
+    _validate_bf(bf)
+    if backend == "pallas":
+        bf = _resolve_bf(x, neighbors, bf, tuned)
+    else:
+        bf = DEFAULT_BF if bf is None else int(bf)
     return _aggregate(x, neighbors, weights, backend, bf, interpret)

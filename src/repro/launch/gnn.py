@@ -21,9 +21,20 @@ recomputed-node fraction and measured incremental traffic (DESIGN.md §9):
       --stream 16 --churn 0.05 --policy bounded-staleness
 
 ``--plan auto`` delegates the configuration choice to the adaptive planner
-(``repro.planner``, DESIGN.md §10): setting, backend, cluster count, and
-refresh policy come from the planner's recommendation for this dataset's
-statistics and the requested churn/query workload.
+(``repro.planner``, DESIGN.md §10): setting, backend, cluster count,
+refresh policy, and neighbor mode come from the planner's recommendation
+for this dataset's statistics and the requested churn/query workload.
+
+Feature-similarity scenarios (``--dataset recsys|anomaly``) arrive as bare
+feature vectors: the served graph is *built* by CAM-backed k-NN search
+(``repro.neighbors``, DESIGN.md §15) on the ``--neighbor-mode`` path —
+``cam`` / ``cam-pallas`` run associative band matching on the traversal
+CAM kernel, ``topk`` the result-identical host fallback. In stream mode
+the same flag routes dirty-frontier membership through the CAM
+(``streaming.frontier``):
+
+  PYTHONPATH=src python -m repro.launch.gnn --dataset recsys \
+      --neighbor-mode cam --stream 8 --churn 0.05
 """
 from __future__ import annotations
 
@@ -124,10 +135,14 @@ def stream_main(args, g, plan, cfg) -> None:
     """--stream driver: ingest a synthetic tick stream, serve batched
     lookups between commits, report incremental refresh statistics."""
     from repro.streaming import StreamingGNNServer
-    srv = StreamingGNNServer(plan, cfg, mode=args.mode, policy=args.policy)
+    frontier = {"topk": "numpy", "cam": "cam",
+                "cam-pallas": "cam-pallas"}[args.neighbor_mode]
+    srv = StreamingGNNServer(plan, cfg, mode=args.mode, policy=args.policy,
+                             frontier_mode=frontier)
     t_cold = srv.refresh()
     print(f"plan: {args.setting}/{args.backend}, {g.n_nodes} nodes, "
           f"{plan.n_clusters} clusters; policy {args.policy}; "
+          f"frontier membership via {frontier}; "
           f"cold full refresh {t_cold * 1e3:.1f} ms")
     rng = np.random.default_rng(0)
     served = 0
@@ -175,8 +190,20 @@ def main() -> None:
                     choices=("centralized", "decentralized", "semi"))
     ap.add_argument("--backend", default="fused",
                     choices=gnn.BACKENDS)
-    ap.add_argument("--dataset", default="collab")
+    ap.add_argument("--dataset", default="collab",
+                    help="a Table-2 name / 'taxi' (dataset_like), or a "
+                         "feature-similarity scenario 'recsys'/'anomaly' "
+                         "whose graph is built by k-NN search "
+                         "(repro.neighbors)")
     ap.add_argument("--scale", type=float, default=0.001)
+    ap.add_argument("--neighbor-mode", default="topk", dest="neighbor_mode",
+                    choices=("topk", "cam", "cam-pallas"),
+                    help="neighbor selection / frontier membership path "
+                         "(DESIGN.md §15): scenario k-NN construction and "
+                         "stream-mode dirty-frontier tests run on the "
+                         "traversal CAM ('cam' = jnp oracle kernel, "
+                         "'cam-pallas' = Pallas kernel) or the "
+                         "result-identical host fallback ('topk')")
     ap.add_argument("--clusters", type=int, default=0,
                     help="default: one per device (decentralized) / "
                          "4 heads (semi)")
@@ -240,7 +267,20 @@ def main() -> None:
         from repro.devices import resolve_technology
         for t in (tech if isinstance(tech, tuple) else (tech,)):
             resolve_technology(t)       # typos fail here, by name
-    g = dataset_like(args.dataset, scale=args.scale, seed=0).gcn_normalize()
+    from repro.neighbors import SCENARIOS, scenario_graph
+    if args.dataset in SCENARIOS:
+        g = scenario_graph(
+            args.dataset, n_nodes=max(int(200_000 * args.scale), 32),
+            feature_len=32, k=args.sample,
+            neighbor_mode="topk" if args.neighbor_mode == "topk" else "cam",
+            backend="pallas" if args.neighbor_mode == "cam-pallas"
+            else "jnp").gcn_normalize()
+        print(f"{args.dataset}: built k-NN graph on the "
+              f"{args.neighbor_mode} path — {g.n_nodes} nodes, "
+              f"{g.n_edges} similarity edges")
+    else:
+        g = dataset_like(args.dataset, scale=args.scale,
+                         seed=0).gcn_normalize()
     if args.plan_mode == "auto":
         from repro.planner import WorkloadProfile, plan as plan_search
         wl = WorkloadProfile(
@@ -254,6 +294,10 @@ def main() -> None:
         rec = result.recommended.candidate
         args.setting, args.backend = rec.setting, rec.backend
         args.clusters, args.policy = rec.n_clusters, rec.policy
+        if args.neighbor_mode != "cam-pallas":
+            # keep an explicit pallas request; otherwise follow the
+            # planner's priced neighbor_mode axis
+            args.neighbor_mode = rec.neighbor_mode
     n_dev = len(jax.devices())
     k = args.clusters or (n_dev if args.setting == "decentralized" else 4)
     buckets = args.buckets if args.buckets in ("auto", "off") \

@@ -1,0 +1,17 @@
+"""Neighbor selection on the traversal CAM (DESIGN.md §15).
+
+CAM-backed k-nearest-neighbor graph construction over LSH band signatures
+plus the synthetic feature-similarity scenarios it opens. The streaming
+counterpart — CAM dirty-frontier membership — lives in
+``repro.streaming.frontier`` (``mode="cam"``); the planner prices both
+under the ``neighbor_mode`` axis (``repro.planner.space``).
+"""
+from .knn import (NEIGHBOR_MODES, band_match_counts, knn_graph,  # noqa: F401
+                  select_topk)
+from .scenarios import (SCENARIOS, scenario_features,  # noqa: F401
+                        scenario_graph)
+from .signature import lsh_signatures, tag_bands  # noqa: F401
+
+__all__ = ["NEIGHBOR_MODES", "band_match_counts", "knn_graph",
+           "select_topk", "SCENARIOS", "scenario_features",
+           "scenario_graph", "lsh_signatures", "tag_bands"]

@@ -1,0 +1,143 @@
+"""CAM-backed k-nearest-neighbor graph construction.
+
+The traversal core's search CAM (IMA-GNN Fig. 2(c), ``kernels.cam_match``)
+does one thing — O(1) associative equality match with a per-query popcount
+— and that is exactly the primitive approximate-nearest-neighbor selection
+over LSH band signatures needs: load every node's tagged band signatures
+(``signature.tag_bands``) into one flat CAM array, search each query
+node's tagged bands against it, and the per-(query, node) match count *is*
+the number of agreeing bands, i.e. the similarity score. Top-k over those
+scores (self excluded, deterministic tie-break toward smaller node id)
+yields the edge list.
+
+Two result-equivalent paths compute the scores:
+
+  * ``mode="cam"``     — through ``kernels.cam_match.search`` (its
+    ``backend=`` picks the jnp oracle or the Pallas kernel), the bitmap
+    folded per band pair. Query rows are chunked so the [Qc*B, N*B] match
+    bitmap stays bounded.
+  * ``mode="topk"``    — the fallback: a direct ``jnp`` signature compare
+    reduced over bands, no CAM anywhere.
+
+Both produce the *same integer score matrix* — band tags make cross-band
+CAM matches impossible and tagged entries are non-negative, so the CAM
+bitmap folds to exactly the per-band equality count — and selection runs
+through one shared ``lax.top_k`` on a collision-free combined key, so the
+resulting edge lists are identical by construction (gated bit-for-bit in
+``benchmarks/cam_topk.py`` and ``tests/test_neighbors.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.kernels.cam_match import search as cam_search
+from repro.neighbors.signature import (DEFAULT_BAND_BITS, DEFAULT_BANDS,
+                                       lsh_signatures, tag_bands)
+
+NEIGHBOR_MODES = ("topk", "cam")
+
+# bound on the CAM match-bitmap footprint per query chunk: Qc*B * N*B int8
+_BITMAP_BUDGET = 1 << 24
+
+
+def band_match_counts(sig_e: np.ndarray, sig_q: np.ndarray,
+                      mode: str = "topk", backend: str = "jnp",
+                      band_bits: int = DEFAULT_BAND_BITS,
+                      interpret: bool | None = None) -> np.ndarray:
+    """[N, B] entry sigs x [Q, B] query sigs -> [Q, N] int32 band-match
+    counts (agreeing bands per pair). ``mode="cam"`` routes through the
+    traversal CAM kernel; ``mode="topk"`` through the jnp oracle compare —
+    identical outputs by construction.
+    """
+    if mode not in NEIGHBOR_MODES:
+        raise ValueError(f"unknown neighbor mode {mode!r}; "
+                         f"one of {NEIGHBOR_MODES}")
+    sig_e = np.asarray(sig_e, np.int32)
+    sig_q = np.asarray(sig_q, np.int32)
+    if sig_e.ndim != 2 or sig_q.ndim != 2 or sig_e.shape[1] != sig_q.shape[1]:
+        raise ValueError(f"band mismatch: entries {sig_e.shape} vs queries "
+                         f"{sig_q.shape}")
+    n, b = sig_e.shape
+    q = sig_q.shape[0]
+    if mode == "topk":
+        counts = (jnp.asarray(sig_q)[:, None, :]
+                  == jnp.asarray(sig_e)[None, :, :]).sum(axis=2)
+        return np.asarray(counts, np.int32)
+    entries = jnp.asarray(tag_bands(sig_e, band_bits))        # [N * B]
+    tagged_q = tag_bands(sig_q, band_bits).reshape(q, b)
+    chunk = max(_BITMAP_BUDGET // max(n * b * b, 1), 1)
+    out = np.empty((q, n), np.int32)
+    for lo in range(0, q, chunk):
+        qc = tagged_q[lo:lo + chunk]                          # [Qc, B]
+        match, _ = cam_search(entries, jnp.asarray(qc.reshape(-1)),
+                              backend=backend, interpret=interpret)
+        # [Qc*B, N*B] bitmap -> per-(query, node) agreeing-band count:
+        # tags zero every cross-band block, so the double band-sum is the
+        # same-band equality count
+        folded = np.asarray(match, np.int32) \
+            .reshape(len(qc), b, n, b).sum(axis=(1, 3))
+        out[lo:lo + len(qc)] = folded
+    return out
+
+
+def select_topk(counts: np.ndarray, k: int,
+                exclude_self: bool = False) -> tuple:
+    """Deterministic top-k selection shared by every mode.
+
+    counts: [Q, N] integer scores. Returns (neighbors [Q, k] int32,
+    scores [Q, k] int32), ordered by (score desc, node id asc) — the
+    combined key is collision-free, so ``lax.top_k``'s tie policy can
+    never leak in and CAM/top-k paths select identically.
+    """
+    counts = np.asarray(counts)
+    q, n = counts.shape
+    if not 1 <= k <= n - (1 if exclude_self else 0):
+        raise ValueError(f"k={k} out of range for {n} candidate nodes"
+                         f"{' (self excluded)' if exclude_self else ''}")
+    c = counts.astype(np.int64)
+    if exclude_self:
+        if q != n:
+            raise ValueError(f"exclude_self needs a square score matrix, "
+                             f"got {counts.shape}")
+        c = c.copy()
+        np.fill_diagonal(c, -1)
+    ids = np.arange(n, dtype=np.int64)
+    key = c * n + (n - 1 - ids)[None, :]
+    if abs(key).max(initial=0) >= np.iinfo(np.int32).max:
+        raise ValueError(f"combined selection key overflows int32 for "
+                         f"{n} nodes at max score {counts.max()}")
+    top, _ = jax.lax.top_k(jnp.asarray(key.astype(np.int32)), k)
+    top = np.asarray(top, np.int64)
+    nbr = (n - 1 - (top % n)).astype(np.int32)
+    return nbr, (top // n).astype(np.int32)
+
+
+def knn_graph(features, k: int = 8, n_bands: int = DEFAULT_BANDS,
+              band_bits: int = DEFAULT_BAND_BITS, seed: int = 0,
+              mode: str = "topk", backend: str = "jnp",
+              min_bands: int = 1,
+              interpret: bool | None = None) -> Graph:
+    """Build the feature-similarity ``Graph`` the runtimes serve.
+
+    Row ``i`` of the CSR holds node i's selected similar nodes as incoming
+    sources (the repo's dst-major edge convention), weighted by the
+    agreeing-band fraction. Candidates matching fewer than ``min_bands``
+    bands are dropped (a zero-band match carries no similarity evidence),
+    so degrees are at most — not exactly — ``k``. ``mode``/``backend``
+    pick the scoring path; every combination yields the identical graph.
+    """
+    x = np.asarray(features, np.float32)
+    sigs = lsh_signatures(x, n_bands=n_bands, band_bits=band_bits, seed=seed)
+    counts = band_match_counts(sigs, sigs, mode=mode, backend=backend,
+                               band_bits=band_bits, interpret=interpret)
+    nbr, score = select_topk(counts, k, exclude_self=True)
+    keep = score >= max(min_bands, 1)
+    degrees = keep.sum(axis=1)
+    indptr = np.zeros(x.shape[0] + 1, np.int64)
+    np.cumsum(degrees, out=indptr[1:])
+    indices = nbr[keep].astype(np.int32)
+    weights = (score[keep].astype(np.float32) / float(n_bands))
+    return Graph(indptr, indices, weights, x)

@@ -5,7 +5,8 @@ wins communication ~790x, decentralized wins computation ~1400x, and the
 authors call for a hybrid. This package decides instead of tabulating:
 given graph statistics, a crossbar inventory, and a churn/query workload
 profile, it searches ``setting × backend × cluster count × crossbar size ×
-refresh policy × device technology`` through pluggable evaluators — the
+refresh policy × device technology × neighbor mode`` through pluggable
+evaluators — the
 calibrated Eqs. 1-7 cost model, the first-principles mapper rollup, the
 device-technology accuracy bound, and measured traffic on
 the executed exchange tables — and returns a Pareto frontier plus one
@@ -28,20 +29,22 @@ from repro.telemetry import CommitSample, DriftLedger, commit_sample
 
 from .evaluate import (DEFAULT_EVALUATORS, PlanContext, accuracy_evaluator,
                        cost_evaluator, evaluate, mapper_evaluator,
-                       memory_evaluator, traffic_evaluator)
+                       memory_evaluator, neighbor_evaluator,
+                       traffic_evaluator)
 from .objective import OBJECTIVES, effective_compute, score, tick_costs
 from .plan import (PlannerResult, ScoredCandidate, pareto_frontier, plan,
                    score_candidate)
 from .replan import ReplanEvent, ReplanMonitor
-from .space import (BACKENDS, LAYOUTS, POLICIES, SETTINGS, Candidate,
-                    WorkloadProfile, candidate_space)
+from .space import (BACKENDS, LAYOUTS, NEIGHBOR_MODES, POLICIES, SETTINGS,
+                    Candidate, WorkloadProfile, candidate_space)
 
 __all__ = [
-    "BACKENDS", "LAYOUTS", "POLICIES", "SETTINGS",
+    "BACKENDS", "LAYOUTS", "NEIGHBOR_MODES", "POLICIES", "SETTINGS",
     "Candidate", "WorkloadProfile", "candidate_space",
     "DEFAULT_EVALUATORS", "PlanContext", "accuracy_evaluator",
     "cost_evaluator", "evaluate",
-    "mapper_evaluator", "memory_evaluator", "traffic_evaluator",
+    "mapper_evaluator", "memory_evaluator", "neighbor_evaluator",
+    "traffic_evaluator",
     "OBJECTIVES", "effective_compute", "score", "tick_costs",
     "PlannerResult", "ScoredCandidate", "pareto_frontier", "plan",
     "score_candidate",

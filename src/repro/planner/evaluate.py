@@ -31,6 +31,11 @@ Built-ins:
     candidate's technology under conductance variation
     (``noise_p99_model``): the Pareto accuracy axis and the quantity the
     ``noise_tolerance`` infeasibility gate reads (DESIGN.md §13).
+  * ``neighbor_evaluator`` — the per-commit neighbor/membership pass at
+    the candidate's ``neighbor_mode`` on the traversal-CAM geometry
+    (``t_neighbor_s`` — DESIGN.md §15): associative dirty-id search for
+    ``cam``, serial table drain for the ``topk`` fallback. Folded into the
+    serving model by ``objective.tick_costs`` for mutating workloads only.
   * ``traffic_evaluator`` — measured wire bytes on a *concrete* graph
     (``distributed.traffic.measure_execution`` / ``measure_incremental``):
     what a full refresh ships and what one policy-committed incremental
@@ -211,6 +216,54 @@ def accuracy_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
     return ctx.memo[key]
 
 
+def neighbor_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
+    """Price one commit's neighbor/membership pass on the traversal CAM
+    (DESIGN.md §15).
+
+    The device's sampled neighbor table — ``rows × sample`` flat column
+    indices — is the associative state; one commit must test it against
+    the commit's dirty ids (``streaming.frontier``). The table occupies
+    ``ceil(entries / cam_rows)`` CAM arrays, drained in
+    ``serial = ceil(arrays / cam_arrays)`` rounds:
+
+      * ``cam``  — each dirty id is one match-line-parallel search across
+        every resident array: ``queries × serial × t_cam``.
+      * ``topk`` — no associative path: the membership test reads the
+        table out row-serially per array round, ``serial × cam_rows ×
+        t_cam`` — so the CAM wins exactly when the dirty-id count stays
+        under one array's depth, and loses on full-graph churn.
+
+    Both are handed to ``objective.tick_costs`` via ``t_neighbor_s`` and
+    billed per commit for mutating workloads (a static graph never pays a
+    membership pass — the modes then tie and ``NEIGHBOR_RANK`` breaks it).
+    Memoized per (setting, n_clusters, xbar_size, technology, policy,
+    neighbor_mode)."""
+    import math
+    key = ("nbr", cand.setting, cand.n_clusters, cand.xbar_size,
+           cand.tech_key, cand.policy, cand.neighbor_mode)
+    if key in ctx.memo:
+        return ctx.memo[key]
+    from repro.mapper.compile import PassPrimitives, items_per_device
+    wl = ctx.workload
+    inv = ctx.inventory_for(cand)
+    prim = PassPrimitives.derive(ctx.hw, inv, tech=cand.head_technology)
+    rows = items_per_device(cand.setting, max(ctx.stats.n_nodes, 1),
+                            cand.n_clusters)
+    entries = rows * max(wl.sample, 1)
+    arrays = math.ceil(entries / max(inv.cam_rows, 1))
+    serial = math.ceil(arrays / max(inv.cam_arrays, 1))
+    frac = wl.recompute_fraction(ctx.stats, wl.commit_interval(cand.policy))
+    queries = max(int(math.ceil(frac * rows)), 1)
+    if cand.neighbor_mode == "cam":
+        t = queries * serial * prim.t_cam
+    else:
+        t = serial * inv.cam_rows * prim.t_cam
+    ctx.memo[key] = {"t_neighbor_s": t,
+                     "neighbor_rounds": float(serial),
+                     "neighbor_queries": float(queries)}
+    return ctx.memo[key]
+
+
 def traffic_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
     """Measured wire traffic on the concrete graph: bytes a full refresh
     exchanges, and bytes one policy-committed incremental tick ships (the
@@ -256,7 +309,7 @@ def traffic_evaluator(cand: Candidate, ctx: PlanContext) -> dict:
 
 
 DEFAULT_EVALUATORS = (cost_evaluator, mapper_evaluator, memory_evaluator,
-                      accuracy_evaluator)
+                      accuracy_evaluator, neighbor_evaluator)
 
 
 def evaluate(cand: Candidate, ctx: PlanContext,

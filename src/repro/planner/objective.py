@@ -60,6 +60,10 @@ def tick_costs(cand: Candidate, ctx: PlanContext, metrics: dict) -> dict:
     refresh_comm = (refresh_communicate_latency(
         cand.setting, stats, hw, cand.n_clusters, frac)
         if wl.mutating else 0.0)
+    # per-commit neighbor/membership pass at the candidate's neighbor_mode
+    # (evaluate.neighbor_evaluator); a static graph never pays one
+    refresh_neighbor = (metrics.get("t_neighbor_s", 0.0)
+                        if wl.mutating else 0.0)
 
     if cand.setting == "centralized":
         n_serving, t_link = 1, hw.t_ln
@@ -69,13 +73,16 @@ def tick_costs(cand: Candidate, ctx: PlanContext, metrics: dict) -> dict:
         n_serving, t_link = max(stats.n_nodes, 1), hw.t_lc
     query_drain = wl.queries_per_tick / n_serving * t_link
 
-    t_tick = (refresh_compute + refresh_comm) / commit_ticks + query_drain
-    t_query_worst = refresh_compute + refresh_comm + query_drain + t_link
+    t_tick = ((refresh_compute + refresh_comm + refresh_neighbor)
+              / commit_ticks + query_drain)
+    t_query_worst = (refresh_compute + refresh_comm + refresh_neighbor
+                     + query_drain + t_link)
     return {
         "commit_ticks": float(commit_ticks),
         "recompute_frac": frac,
         "refresh_compute_s": refresh_compute,
         "refresh_comm_s": refresh_comm,
+        "refresh_neighbor_s": refresh_neighbor,
         "query_drain_s": query_drain,
         "t_tick": t_tick,
         "t_query_worst": t_query_worst,

@@ -39,8 +39,8 @@ from repro.telemetry import event as telemetry_event
 from .evaluate import (DEFAULT_EVALUATORS, PlanContext, evaluate,
                        traffic_evaluator)
 from .objective import OBJECTIVES, score, tick_costs
-from .space import (BACKEND_RANK, LAYOUT_RANK, Candidate, WorkloadProfile,
-                    candidate_space)
+from .space import (BACKEND_RANK, LAYOUT_RANK, NEIGHBOR_RANK, Candidate,
+                    WorkloadProfile, candidate_space)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +53,7 @@ class ScoredCandidate:
     def sort_key(self) -> tuple:
         return (self.score, BACKEND_RANK.get(self.candidate.backend, 9),
                 LAYOUT_RANK.get(self.candidate.layout, 9),
+                NEIGHBOR_RANK.get(self.candidate.neighbor_mode, 9),
                 self.candidate.key)
 
     def as_record(self) -> dict:
@@ -62,7 +63,8 @@ class ScoredCandidate:
                     n_clusters=c.n_clusters,
                     xbar="paper" if c.xbar_size is None else c.xbar_size,
                     policy=c.policy, layout=c.layout,
-                    technology=c.tech_key, score=self.score,
+                    technology=c.tech_key,
+                    neighbor_mode=c.neighbor_mode, score=self.score,
                     **{k: v for k, v in self.metrics.items()
                        if isinstance(v, (int, float))})
 

@@ -22,6 +22,10 @@ SETTINGS = ("centralized", "decentralized", "semi")
 BACKENDS = ("jnp", "pallas", "fused")
 POLICIES = ("eager", "interval", "bounded-staleness")
 LAYOUTS = ("dense", "bucketed")
+# neighbor-selection paths (kept in sync with repro.neighbors.NEIGHBOR_MODES
+# — this module stays numpy-only): ``cam`` runs membership/k-NN scoring on
+# the traversal CAM, ``topk`` on the host sort/top-k fallback
+NEIGHBOR_MODES = ("topk", "cam")
 
 # deterministic tie-break: when two candidates score identically the planner
 # prefers the faster measured backend (fused keeps Z in VMEM — DESIGN.md §5)
@@ -32,6 +36,10 @@ BACKEND_RANK = {"fused": 0, "pallas": 1, "jnp": 2}
 # (it Pareto-dominates its dense twin on the ``device_bytes`` axis, so
 # ranking it first keeps the recommendation on the frontier)
 LAYOUT_RANK = {"bucketed": 0, "dense": 1}
+# third tie-break: cam before topk — when the serving model cannot separate
+# the modes (non-mutating workloads pay no per-commit membership pass) the
+# CAM path is the in-memory one the paper argues for, at no modeled cost
+NEIGHBOR_RANK = {"cam": 0, "topk": 1}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +56,11 @@ class Candidate:
     ``layout`` picks the partition data plane: ``dense`` is the uniform
     n_max padding, ``bucketed`` the capacity-bucketed ragged layout
     (DESIGN.md §12) — numerically identical, cheaper device memory.
+    ``neighbor_mode`` picks where neighbor selection / dirty-frontier
+    membership runs (DESIGN.md §15): ``cam`` on the traversal core's
+    search CAM, ``topk`` on the host sort/top-k fallback — result-identical
+    by the kernel contract, so the axis is purely a hardware/pricing
+    decision (``evaluate.neighbor_evaluator``).
     ``technology`` is the device-technology axis (DESIGN.md §13): a
     registered name (``repro.devices.bank``) builds every tier from that
     technology; a ``(spoke_tech, head_tech)`` pair — semi only — builds
@@ -63,6 +76,7 @@ class Candidate:
     policy: str = "eager"
     layout: str = "dense"
     technology: str | tuple = "sot-mram"
+    neighbor_mode: str = "topk"
 
     def __post_init__(self):
         if self.setting not in SETTINGS:
@@ -73,6 +87,8 @@ class Candidate:
             raise ValueError(f"unknown policy {self.policy!r}")
         if self.layout not in LAYOUTS:
             raise ValueError(f"unknown layout {self.layout!r}")
+        if self.neighbor_mode not in NEIGHBOR_MODES:
+            raise ValueError(f"unknown neighbor mode {self.neighbor_mode!r}")
         if self.n_clusters < 1:
             raise ValueError(f"n_clusters must be >= 1, got {self.n_clusters}")
         if self.setting == "centralized" and self.n_clusters != 1:
@@ -114,7 +130,8 @@ class Candidate:
     def key(self) -> str:
         xb = "paper" if self.xbar_size is None else str(self.xbar_size)
         return (f"{self.setting}/{self.backend}/k{self.n_clusters}"
-                f"/xb{xb}/{self.policy}/{self.layout}/{self.tech_key}")
+                f"/xb{xb}/{self.policy}/{self.layout}/{self.tech_key}"
+                f"/{self.neighbor_mode}")
 
     def build_plan(self, graph, sample: int, seed: int = 0,
                    spokes_per_head: int = 4):
@@ -212,7 +229,8 @@ def candidate_space(stats,
                     policies: tuple | None = None,
                     workload: WorkloadProfile | None = None,
                     layouts: tuple = LAYOUTS,
-                    technologies: tuple = ("sot-mram",)) -> list:
+                    technologies: tuple = ("sot-mram",),
+                    neighbor_modes: tuple | None = None) -> list:
     """Enumerate the candidate grid for one workload.
 
     Per-setting structure is respected: centralized pins ``n_clusters=1``;
@@ -227,10 +245,18 @@ def candidate_space(stats,
     ``technologies`` entries are registered names or ``(spoke, head)``
     pairs; pairs only make sense with two tiers, so they enumerate under
     the semi setting only.
+
+    Like refresh policies, neighbor modes only differentiate mutating
+    workloads (the membership pass is billed per commit), so a query-only
+    profile collapses ``neighbor_modes`` to the ``topk`` fallback.
     """
     if policies is None:
         policies = (POLICIES if workload is not None and workload.mutating
                     else ("eager",))
+    if neighbor_modes is None:
+        neighbor_modes = (NEIGHBOR_MODES
+                          if workload is not None and workload.mutating
+                          else ("topk",))
     counts = sorted({max(1, min(int(k), max(stats.n_nodes, 1)))
                      for k in cluster_counts})
     out = []
@@ -250,7 +276,8 @@ def candidate_space(stats,
                     for policy in policies:
                         for layout in lys:
                             for tech in techs:
-                                out.append(Candidate(setting, backend, k,
-                                                     size, policy, layout,
-                                                     tech))
+                                for nm in neighbor_modes:
+                                    out.append(Candidate(setting, backend,
+                                                         k, size, policy,
+                                                         layout, tech, nm))
     return out

@@ -21,13 +21,13 @@ settings and reports full-vs-incremental wall-clock, recomputed-node
 fraction, and measured traffic (EXPERIMENTS.md §Streaming-replay).
 """
 from .delta import DeltaResult, GraphDelta, apply_deltas
-from .frontier import FrontierMasks, expand_frontier
+from .frontier import FRONTIER_MODES, FrontierMasks, expand_frontier
 from .incremental import IncrementalEngine, StreamingUpdate
 from .server import POLICIES, StreamingGNNServer
 
 __all__ = [
     "DeltaResult", "GraphDelta", "apply_deltas",
-    "FrontierMasks", "expand_frontier",
+    "FRONTIER_MODES", "FrontierMasks", "expand_frontier",
     "IncrementalEngine", "StreamingUpdate",
     "POLICIES", "StreamingGNNServer",
 ]

@@ -20,12 +20,30 @@ Mask semantics (``FrontierMasks.masks[l]``, shape [L+1, N]):
 ``streaming.incremental`` consumes these masks directly; the recomputed-node
 fraction they imply is the headline number ``benchmarks/streaming_replay``
 reports.
+
+The inner membership test — "does this row's sample contain a dirty
+node?" — is an associative lookup, so it can run on the traversal core's
+search CAM (DESIGN.md §15): load the dirty node ids as CAM entries and
+search the sample's flattened column indices against them; a non-zero
+match count *is* membership. ``expand_frontier(..., mode=)`` selects the
+path (``numpy`` expansion, ``cam`` via the jnp kernel oracle,
+``cam-pallas`` via the Pallas kernel); all modes are bit-identical by
+construction — pad slots are replaced by ``-1`` sentinels, which the CAM
+wrapper guarantees match nothing.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.cam_match import search as _cam_search
+
+FRONTIER_MODES = ("numpy", "cam", "cam-pallas")
+
+# bound on the CAM match-bitmap footprint per chunk: Qc x n_dirty int8
+_BITMAP_BUDGET = 1 << 24
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,9 +76,34 @@ class FrontierMasks:
         return self.masks.sum(axis=1)
 
 
+def _dirty_hop_cam(prev: np.ndarray, flat: np.ndarray, shape: tuple,
+                   backend: str, interpret: bool | None) -> np.ndarray:
+    """One hop of dirt propagation on the search CAM.
+
+    ``prev``: [N] bool dirty mask at level l-1. ``flat``: the padded
+    sample's column indices flattened to [N*S] with pad slots already
+    replaced by ``-1`` (negative queries match nothing). Returns the [N]
+    bool "any sampled input dirty" mask — identical to
+    ``(prev[neighbors] & live).any(axis=1)``.
+    """
+    dirty_ids = np.nonzero(prev)[0].astype(np.int32)
+    if dirty_ids.size == 0:
+        return np.zeros(shape[0], bool)
+    entries = jnp.asarray(dirty_ids)
+    chunk = max(_BITMAP_BUDGET // max(dirty_ids.size, 1), 1)
+    hit = np.empty(flat.size, bool)
+    for lo in range(0, flat.size, chunk):
+        qc = flat[lo:lo + chunk]
+        _, counts = _cam_search(entries, jnp.asarray(qc), backend=backend,
+                                interpret=interpret)
+        hit[lo:lo + len(qc)] = np.asarray(counts) > 0
+    return hit.reshape(shape).any(axis=1)
+
+
 def expand_frontier(neighbors: np.ndarray, weights: np.ndarray,
                     feature_dirty: np.ndarray, structure_dirty: np.ndarray,
-                    n_layers: int) -> FrontierMasks:
+                    n_layers: int, mode: str = "numpy",
+                    interpret: bool | None = None) -> FrontierMasks:
     """BFS the dirt L hops through the sampled adjacency.
 
     ``neighbors``/``weights``: [N, S] — the *global* padded sample of the
@@ -70,7 +113,15 @@ def expand_frontier(neighbors: np.ndarray, weights: np.ndarray,
     not propagate through them (without this, a dirty node 0 would dirty
     every padded row). ``feature_dirty`` / ``structure_dirty``: [N] bool
     from ``apply_deltas``.
+
+    ``mode`` picks the membership-test path (``FRONTIER_MODES``); every
+    mode returns bit-identical masks — ``cam``/``cam-pallas`` route the
+    per-hop membership test through ``kernels.cam_match.search`` with the
+    dirty ids as CAM entries.
     """
+    if mode not in FRONTIER_MODES:
+        raise ValueError(f"unknown frontier mode {mode!r}; "
+                         f"one of {FRONTIER_MODES}")
     neighbors = np.asarray(neighbors)
     n = neighbors.shape[0]
     live = np.asarray(weights) != 0        # [N, S] real (non-padding) slots
@@ -78,8 +129,18 @@ def expand_frontier(neighbors: np.ndarray, weights: np.ndarray,
     structure_dirty = np.asarray(structure_dirty, bool).reshape(n)
     masks = np.zeros((n_layers + 1, n), bool)
     masks[0] = feature_dirty
+    if mode == "numpy":
+        for l in range(1, n_layers + 1):
+            # a row is dirty iff its own sample changed or any sampled
+            # input was
+            prev = masks[l - 1]
+            masks[l] = structure_dirty | (prev[neighbors] & live).any(axis=1)
+        return FrontierMasks(masks)
+    backend = "jnp" if mode == "cam" else "pallas"
+    # pad slots -> -1 sentinel once: negative CAM queries match nothing
+    flat = np.where(live, neighbors, -1).astype(np.int32).reshape(-1)
     for l in range(1, n_layers + 1):
-        # a row is dirty iff its own sample changed or any sampled input was
-        prev = masks[l - 1]
-        masks[l] = structure_dirty | (prev[neighbors] & live).any(axis=1)
+        hop = _dirty_hop_cam(masks[l - 1], flat, neighbors.shape,
+                             backend, interpret)
+        masks[l] = structure_dirty | hop
     return FrontierMasks(masks)

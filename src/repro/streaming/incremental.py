@@ -112,11 +112,16 @@ class IncrementalEngine:
     """Streaming counterpart of ``ExecutionPlan.make_forward``."""
 
     def __init__(self, plan: ExecutionPlan, cfg, params,
-                 mode: str = "alltoall"):
+                 mode: str = "alltoall", frontier_mode: str = "numpy"):
+        from repro.streaming.frontier import FRONTIER_MODES
+        if frontier_mode not in FRONTIER_MODES:
+            raise ValueError(f"unknown frontier mode {frontier_mode!r}; "
+                             f"one of {FRONTIER_MODES}")
         self.plan = plan
         self.cfg = plan.gnn_config(cfg)
         self.params = params
         self.mode = mode
+        self.frontier_mode = frontier_mode
         self.graph = plan.graph
         self.n_layers = len(params)
         self.sample = plan.sample
@@ -347,7 +352,8 @@ class IncrementalEngine:
     def _refresh_dirty(self, res: DeltaResult, t0: float) -> StreamingUpdate:
         l_total = self.n_layers
         fr = expand_frontier(self._gnbr, self._gwts, res.feature_dirty,
-                             res.structure_dirty, l_total)
+                             res.structure_dirty, l_total,
+                             mode=self.frontier_mode)
         if not self.cfg.numerics.ideal:
             # global DAC scale couples every row — subset recompute would
             # quantize against a stale max|Z| (DESIGN.md §9): degrade
@@ -513,7 +519,8 @@ class IncrementalEngine:
             delta.clear()
             self._sync_plan_feats()
         self.full_refresh()
-        fr = expand_frontier(self._gnbr, self._gwts, fd, sd, self.n_layers)
+        fr = expand_frontier(self._gnbr, self._gwts, fd, sd, self.n_layers,
+                             mode=self.frontier_mode)
         self._new_send = None
         self.ticks += 1
         self.last_update = StreamingUpdate(

@@ -45,7 +45,8 @@ class StreamingGNNServer(GNNServer):
     def __init__(self, plan: ExecutionPlan, cfg, params=None, mesh=None,
                  seed: int = 0, mode: str = "alltoall",
                  policy: str = "eager", interval: int = 4,
-                 max_staleness: int = 8, max_dirty_frac: float = 0.25):
+                 max_staleness: int = 8, max_dirty_frac: float = 0.25,
+                 frontier_mode: str = "numpy"):
         assert policy in POLICIES, policy
         super().__init__(plan, cfg, params=params, mesh=mesh, seed=seed,
                          mode=mode)
@@ -53,7 +54,9 @@ class StreamingGNNServer(GNNServer):
         self.interval = interval
         self.max_staleness = max_staleness
         self.max_dirty_frac = max_dirty_frac
-        self.engine = IncrementalEngine(plan, cfg, self.params, mode=mode)
+        self.frontier_mode = frontier_mode
+        self.engine = IncrementalEngine(plan, cfg, self.params, mode=mode,
+                                        frontier_mode=frontier_mode)
         self.updates: list[StreamingUpdate] = []
         self.commits = 0
         self.full_refreshes = 0
@@ -198,5 +201,6 @@ class StreamingGNNServer(GNNServer):
         buffer restart against the new node set."""
         super().update_plan(plan, cfg)
         self.engine = IncrementalEngine(plan, self.cfg, self.params,
-                                        mode=self.mode)
+                                        mode=self.mode,
+                                        frontier_mode=self.frontier_mode)
         self._reset_buffers()

@@ -51,3 +51,79 @@ def test_search_counts_equal_degree():
     _, c = search(jnp.asarray(ci), jnp.asarray(qs))
     degree = np.bincount(ci, minlength=nodes)
     np.testing.assert_array_equal(np.asarray(c).ravel(), degree)
+
+
+def test_explicit_zero_block_raises():
+    """bq=0 / be=0 is a caller bug, not a default request — the falsy-or
+    resolution this guards against silently substituted the defaults."""
+    ci = jnp.asarray(np.arange(16, dtype=np.int32))
+    qs = jnp.asarray(np.arange(4, dtype=np.int32))
+    for backend in ("jnp", "pallas"):
+        for kw in ({"bq": 0}, {"be": 0}, {"bq": -3}):
+            with pytest.raises(ValueError, match="positive block"):
+                search(ci, qs, backend=backend, interpret=True, **kw)
+
+
+def test_kernel_divisibility_error_names_dim_and_padding_api():
+    """The raw kernel's shape check must say which dim is wrong and point
+    at the padding ops wrapper (crossbar_matmul_quantized precedent)."""
+    from repro.kernels.cam_match.cam_match import cam_search
+    with pytest.raises(ValueError, match=r"E divisible.*got E=100"):
+        cam_search(jnp.zeros(100, jnp.int32), jnp.zeros(8, jnp.int32),
+                   bq=8, be=128, interpret=True)
+    with pytest.raises(ValueError, match=r"Q divisible.*ops layer pads"):
+        cam_search(jnp.zeros(128, jnp.int32), jnp.zeros(5, jnp.int32),
+                   bq=8, be=128, interpret=True)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_negative_queries_match_nothing(backend):
+    """A -1 query must return an all-zero row and count 0 — it used to
+    activate every -1 pad slot of the padded entry array."""
+    ci = jnp.asarray(np.array([3, -1, 5, -1, 3], np.int32))
+    qs = jnp.asarray(np.array([-1, 3, -2, 5], np.int32))
+    m, c = search(ci, qs, backend=backend, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c), [0, 2, 0, 1])
+    m = np.asarray(m)
+    assert m[0].sum() == 0 and m[2].sum() == 0
+    np.testing.assert_array_equal(m[1], [1, 0, 0, 0, 1])
+
+
+@pytest.mark.parametrize("bq,be", [(1, 8), (3, 32), (8, 128)])
+def test_block_configs_bit_identical(bq, be):
+    """Any (bq, be) pair only re-tiles independent compares — results must
+    be bit-identical to the oracle on odd (non-multiple) shapes."""
+    rng = np.random.default_rng(bq * 100 + be)
+    ci = jnp.asarray(rng.integers(0, 23, size=(157,)).astype(np.int32))
+    qs = jnp.asarray(rng.integers(0, 23, size=(11,)).astype(np.int32))
+    m_ref, c_ref = cam_search_ref(ci, qs)
+    m, c = search(ci, qs, backend="pallas", bq=bq, be=be, interpret=True)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(m_ref))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c_ref))
+
+
+def test_tuned_config_resolution_precedence():
+    """Explicit > TunedKernels bundle > process registry > default."""
+    from repro.kernels.cam_match.ops import (DEFAULT_BE, DEFAULT_BQ,
+                                             _resolve_blocks)
+    from repro.tuning import registry
+    from repro.tuning.space import CamConfig, CamGeometry, TunedKernels
+    ci = jnp.zeros(64, jnp.int32)
+    qs = jnp.zeros(4, jnp.int32)
+    geom = CamGeometry(e=64, q=4)
+    saved = registry.active()
+    try:
+        registry.clear()
+        assert _resolve_blocks(ci, qs, None, None, None) == \
+            (DEFAULT_BQ, DEFAULT_BE)
+        registry.register(geom.key(), CamConfig(bq=2, be=32))
+        assert _resolve_blocks(ci, qs, None, None, None) == (2, 32)
+        tuned = TunedKernels.of({geom.key(): CamConfig(bq=4, be=16)})
+        assert _resolve_blocks(ci, qs, None, None, tuned) == (4, 16)
+        assert _resolve_blocks(ci, qs, 1, 8, tuned) == (1, 8)
+        # a partial explicit keeps the other side on the resolved config
+        assert _resolve_blocks(ci, qs, 2, None, tuned) == (2, 16)
+    finally:
+        registry.clear()
+        for k, v in saved.items():
+            registry.register(k, v)

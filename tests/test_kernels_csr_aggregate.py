@@ -103,3 +103,16 @@ def test_gcn_sample_matches_dense_a_hat_oracle():
     z = np.asarray(csr_aggregate_ref(jnp.asarray(g.features),
                                      jnp.asarray(nbr), jnp.asarray(wts)))
     np.testing.assert_allclose(z, a @ g.features, rtol=1e-5, atol=1e-5)
+
+
+def test_explicit_zero_bf_raises():
+    """bf=0 is a caller bug, not a default request — the falsy-or
+    resolution this guards against silently substituted DEFAULT_BF."""
+    x = jnp.zeros((4, 8), jnp.float32)
+    nbr = jnp.zeros((4, 2), jnp.int32)
+    wts = jnp.ones((4, 2), jnp.float32)
+    for backend in ("jnp", "pallas"):
+        for bf in (0, -16):
+            with pytest.raises(ValueError, match="positive feature block"):
+                aggregate(x, nbr, wts, backend=backend, bf=bf,
+                          interpret=True)

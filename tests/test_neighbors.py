@@ -1,0 +1,219 @@
+"""CAM-backed k-NN construction: signatures, scoring, selection, scenarios.
+
+The contract under test is *result equivalence*: the CAM path (jnp oracle
+or Pallas kernel) and the host top-k fallback must produce bit-identical
+graphs — same CSR triple, same weights — on every input. Everything else
+(signature determinism, tag injectivity, selection ordering) feeds that.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.neighbors import (NEIGHBOR_MODES, SCENARIOS, band_match_counts,
+                             knn_graph, lsh_signatures, scenario_features,
+                             scenario_graph, select_topk, tag_bands)
+
+
+def _feats(n, f, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((n, f)) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- signatures
+
+def test_signatures_deterministic_and_seeded():
+    x = _feats(40, 16, seed=1)
+    a = lsh_signatures(x, n_bands=4, band_bits=6, seed=7)
+    b = lsh_signatures(x, n_bands=4, band_bits=6, seed=7)
+    c = lsh_signatures(x, n_bands=4, band_bits=6, seed=8)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert a.shape == (40, 4) and a.dtype == np.int32
+    assert a.min() >= 0 and a.max() < 2 ** 6
+
+
+def test_identical_rows_identical_signatures():
+    x = _feats(8, 12, seed=2)
+    x[5] = x[0]
+    s = lsh_signatures(x, n_bands=6, band_bits=8)
+    np.testing.assert_array_equal(s[5], s[0])
+
+
+def test_signature_validation():
+    x = _feats(4, 8)
+    with pytest.raises(ValueError, match="n_bands"):
+        lsh_signatures(x, n_bands=0)
+    with pytest.raises(ValueError, match="band_bits"):
+        lsh_signatures(x, band_bits=0)
+    with pytest.raises(ValueError, match=r"\[N, F\]"):
+        lsh_signatures(x[0])
+    with pytest.raises(ValueError, match="int32 CAM entry"):
+        lsh_signatures(x, n_bands=4096, band_bits=20)
+
+
+def test_tag_bands_injective_across_bands():
+    """Band b's tag range never overlaps band b+1's: a CAM equality match
+    on tags can only come from the *same* band agreeing."""
+    sigs = np.stack([np.zeros(3, np.int32),
+                     np.full(3, (1 << 8) - 1, np.int32)]).T  # [3, 2]
+    tags = tag_bands(sigs, band_bits=8).reshape(3, 2)
+    assert tags[0, 0] == 0
+    assert tags[0, 1] == 2 * 256 - 1
+    # max tag of band 0 (255) < min tag of band 1 (256)
+    assert tags[:, 0].max() < 256 <= tags[:, 1].min()
+
+
+def test_tag_bands_range_guard():
+    with pytest.raises(ValueError, match="must lie in"):
+        tag_bands(np.full((2, 2), 300, np.int32), band_bits=8)
+
+
+# ------------------------------------------------------------------- scoring
+
+@pytest.mark.parametrize("n,f", [(17, 8), (64, 24)])
+def test_band_match_counts_three_paths_identical(n, f):
+    x = _feats(n, f, seed=3)
+    sig = lsh_signatures(x, n_bands=5, band_bits=7)
+    ref = band_match_counts(sig, sig, mode="topk", band_bits=7)
+    for mode, backend in (("cam", "jnp"), ("cam", "pallas")):
+        got = band_match_counts(sig, sig, mode=mode, backend=backend,
+                                band_bits=7, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_band_match_counts_diagonal_is_band_count():
+    """Every node agrees with itself on all bands."""
+    x = _feats(12, 8, seed=4)
+    sig = lsh_signatures(x, n_bands=6, band_bits=5)
+    counts = np.asarray(band_match_counts(sig, sig, mode="topk",
+                                          band_bits=5))
+    np.testing.assert_array_equal(np.diag(counts), np.full(12, 6))
+
+
+# ----------------------------------------------------------------- selection
+
+def test_select_topk_orders_by_count_then_id():
+    counts = np.array([[3, 9, 9, 1, 5]], np.int32)
+    nbr, score = select_topk(counts, k=3)
+    np.testing.assert_array_equal(nbr[0], [1, 2, 4])
+    np.testing.assert_array_equal(score[0], [9, 9, 5])
+
+
+def test_select_topk_exclude_self():
+    counts = np.array([[9, 2, 5], [1, 9, 5], [1, 2, 9]], np.int32)
+    nbr, _ = select_topk(counts, k=1, exclude_self=True)
+    np.testing.assert_array_equal(nbr.ravel(), [2, 2, 1])
+
+
+def test_select_topk_k_bounds():
+    counts = np.ones((2, 4), np.int32)
+    with pytest.raises(ValueError, match="k"):
+        select_topk(counts, k=0)
+    with pytest.raises(ValueError, match="k"):
+        select_topk(counts, k=5, exclude_self=True)
+
+
+def test_select_topk_large_counts_no_overflow():
+    """Counts near the packing headroom still order correctly; counts past
+    it raise instead of silently wrapping in the int32 top-k key."""
+    counts = np.array([[2 ** 20, 2 ** 20 + 1, 1]], np.int32)
+    nbr, _ = select_topk(counts, k=2)
+    np.testing.assert_array_equal(nbr[0], [1, 0])
+    with pytest.raises(ValueError, match="overflow"):
+        select_topk(np.array([[2 ** 30, 1, 0]], np.int32), k=1)
+
+
+# --------------------------------------------------------------- full graphs
+
+@pytest.mark.parametrize("mode,backend", [("cam", "jnp"), ("cam", "pallas")])
+def test_knn_graph_equivalent_to_topk(mode, backend):
+    x = _feats(50, 16, seed=5, scale=2.0)
+    ref = knn_graph(x, k=6, mode="topk")
+    got = knn_graph(x, k=6, mode=mode, backend=backend, interpret=True)
+    np.testing.assert_array_equal(got.indptr, ref.indptr)
+    np.testing.assert_array_equal(got.indices, ref.indices)
+    np.testing.assert_array_equal(got.edge_weight, ref.edge_weight)
+
+
+def test_knn_graph_min_bands_prunes():
+    x, _ = scenario_features("recsys", n_nodes=60, feature_len=16, seed=6)
+    loose = knn_graph(x, k=5, min_bands=1)
+    tight = knn_graph(x, k=5, min_bands=4)
+    assert 0 < tight.n_edges <= loose.n_edges
+    assert float(tight.edge_weight.min()) >= 4 / 8 - 1e-6
+
+
+def test_knn_graph_validation():
+    x = _feats(10, 8)
+    with pytest.raises(ValueError, match="mode"):
+        knn_graph(x, k=3, mode="hash")
+    with pytest.raises(ValueError, match="k"):
+        knn_graph(x, k=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(12, 40), f=st.integers(4, 20),
+       k=st.integers(1, 6), seed=st.integers(0, 5))
+def test_knn_graph_property_equivalence(n, f, k, seed):
+    """Property sweep: any size/seed, the three paths agree bit-for-bit."""
+    x = _feats(n, f, seed=seed)
+    k = min(k, n - 1)
+    ref = knn_graph(x, k=k, mode="topk")
+    for backend in ("jnp", "pallas"):
+        got = knn_graph(x, k=k, mode="cam", backend=backend, interpret=True)
+        np.testing.assert_array_equal(got.indptr, ref.indptr)
+        np.testing.assert_array_equal(got.indices, ref.indices)
+        np.testing.assert_array_equal(got.edge_weight, ref.edge_weight)
+
+
+# ----------------------------------------------------------------- scenarios
+
+def test_scenario_features_shapes_and_determinism():
+    for name in SCENARIOS:
+        x1, y1 = scenario_features(name, n_nodes=64, feature_len=16, seed=3)
+        x2, y2 = scenario_features(name, n_nodes=64, feature_len=16, seed=3)
+        assert x1.shape == (64, 16) and x1.dtype == np.float32
+        assert y1.shape == (64,)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+
+
+def test_recsys_topics_cluster_in_graph():
+    """Same-topic nodes share LSH bands far more often than cross-topic:
+    the built graph should connect mostly within topics."""
+    x, topics = scenario_features("recsys", n_nodes=96, feature_len=24,
+                                  seed=0, n_topics=4)
+    g = knn_graph(x, k=5)
+    src = np.repeat(np.arange(g.n_nodes), np.diff(g.indptr))
+    same = topics[src] == topics[g.indices]
+    assert same.mean() > 0.8
+
+
+def test_anomaly_labels_marked():
+    _, y = scenario_features("anomaly", n_nodes=200, feature_len=16,
+                             anomaly_frac=0.1, seed=1)
+    assert 10 <= int(y.sum()) <= 30
+
+
+def test_scenario_graph_paths_agree():
+    for name in SCENARIOS:
+        ref = scenario_graph(name, n_nodes=48, feature_len=12, k=4,
+                             neighbor_mode="topk")
+        got = scenario_graph(name, n_nodes=48, feature_len=12, k=4,
+                             neighbor_mode="cam", interpret=True)
+        np.testing.assert_array_equal(got.indices, ref.indices)
+        np.testing.assert_array_equal(got.edge_weight, ref.edge_weight)
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError, match="scenario"):
+        scenario_features("webscale")
+    with pytest.raises(ValueError, match="n_nodes"):
+        scenario_features("recsys", n_nodes=0)
+
+
+def test_modes_tuple_matches_planner_axis():
+    """repro.neighbors and the (numpy-only) planner space must agree on
+    the mode vocabulary — they are kept in sync by hand."""
+    from repro.planner import NEIGHBOR_MODES as planner_modes
+    assert tuple(planner_modes) == tuple(NEIGHBOR_MODES)

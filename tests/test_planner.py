@@ -220,3 +220,81 @@ def test_replan_monitor_swaps_plan_on_traffic_drift(make_graph):
     ref = ref_plan.scatter(np.asarray(
         ref_plan.make_forward(cfg)(srv.params)))
     np.testing.assert_allclose(out, ref[:5], rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------- neighbor-mode axis
+
+def test_candidate_neighbor_mode_validation_and_key():
+    with pytest.raises(ValueError, match="neighbor"):
+        Candidate("semi", neighbor_mode="bloom")
+    c = Candidate("semi", n_clusters=16, neighbor_mode="cam")
+    assert c.key.endswith("/cam")
+    assert Candidate("semi", n_clusters=16).neighbor_mode == "topk"
+
+
+def test_candidate_space_neighbor_axis_follows_workload():
+    from repro.planner import NEIGHBOR_MODES
+    mutating = candidate_space(TAXI_STATS, workload=MIXED)
+    assert {c.neighbor_mode for c in mutating} == set(NEIGHBOR_MODES)
+    # a static workload has no dirty sets to test membership on: the axis
+    # collapses exactly like the refresh-policy axis does
+    static = candidate_space(TAXI_STATS,
+                             workload=WorkloadProfile(queries_per_tick=10))
+    assert {c.neighbor_mode for c in static} == {"topk"}
+
+
+def test_neighbor_evaluator_prices_both_modes_positive():
+    from repro.planner import neighbor_evaluator
+    ctx = PlanContext(TAXI_STATS, MIXED)
+    for nm in ("cam", "topk"):
+        c = Candidate("semi", n_clusters=16, neighbor_mode=nm)
+        m = neighbor_evaluator(c, ctx)
+        assert m["t_neighbor_s"] > 0.0
+        assert m["neighbor_rounds"] >= 1.0
+        assert m["neighbor_queries"] >= 1.0
+
+
+def test_neighbor_tradeoff_crosses_with_dirty_count():
+    """CAM membership wins while the per-commit query count stays under
+    one array's row budget; a huge dirty set flips the decision to the
+    serial top-k drain — the pricing must reproduce that crossover."""
+    from repro.planner import neighbor_evaluator
+
+    def costs(churn):
+        wl = WorkloadProfile(churn=churn, queries_per_tick=64)
+        ctx = PlanContext(TAXI_STATS, wl)
+        out = {}
+        for nm in ("cam", "topk"):
+            c = Candidate("semi", n_clusters=16, neighbor_mode=nm)
+            out[nm] = neighbor_evaluator(c, ctx)["t_neighbor_s"]
+        return out
+
+    quiet = costs(1e-4)          # few dirty ids per commit
+    stormy = costs(0.9)          # nearly every row dirty
+    assert quiet["cam"] < quiet["topk"]
+    assert stormy["cam"] >= stormy["topk"]
+
+
+def test_tick_costs_fold_neighbor_refresh_only_when_mutating():
+    from repro.planner import tick_costs
+
+    def refresh(wl):
+        ctx = PlanContext(TAXI_STATS, wl)
+        c = Candidate("semi", n_clusters=16, neighbor_mode="cam")
+        sc = score_candidate(c, ctx, "throughput")
+        return sc.metrics.get("refresh_neighbor_s", 0.0)
+
+    assert refresh(MIXED) > 0.0
+    assert refresh(WorkloadProfile(queries_per_tick=10)) == 0.0
+
+
+def test_neighbor_axis_never_breaks_self_consistency():
+    """The new axis doubles the grid; the recommendation must still be the
+    exhaustive argmin of the planner's own evaluators."""
+    result = plan(TAXI_STATS, "throughput", workload=MIXED)
+    ctx = PlanContext(TAXI_STATS, MIXED)
+    rescored = [score_candidate(c, ctx, "throughput")
+                for c in candidate_space(TAXI_STATS, workload=MIXED)]
+    best = min(rescored, key=lambda s: s.sort_key)
+    assert result.recommended.candidate == best.candidate
+    assert result.recommended.candidate.neighbor_mode in ("cam", "topk")

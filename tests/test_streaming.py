@@ -328,3 +328,75 @@ def test_streaming_query_serves_policy_bounded_staleness(make_graph):
     np.testing.assert_array_equal(srv.query(np.arange(4)), before)  # stale
     srv.flush()
     assert not np.allclose(srv.query(np.arange(4)), before)
+
+
+# ---- CAM-backed frontier membership: bit-identity contract --------------
+
+def test_frontier_cam_modes_bit_identical(make_graph):
+    from _hyp import given, settings, st
+    from repro.streaming import FRONTIER_MODES
+
+    @settings(max_examples=8, deadline=None)
+    @given(n=st.integers(10, 60), e=st.integers(20, 200),
+           frac=st.floats(0.0, 0.6), seed=st.integers(0, 4))
+    def run(n, e, frac, seed):
+        g = make_graph(n, min(e, n * (n - 1)), 4, seed=seed)
+        nbr, wts = g.neighbor_sample(5)
+        rng = np.random.default_rng(seed + 100)
+        fd = rng.random(n) < frac
+        sd = rng.random(n) < frac / 3
+        ref = expand_frontier(nbr, wts, fd, sd, 3, mode="numpy")
+        for mode in FRONTIER_MODES[1:]:
+            fr = expand_frontier(nbr, wts, fd, sd, 3, mode=mode,
+                                 interpret=True)
+            np.testing.assert_array_equal(fr.masks, ref.masks)
+    run()
+
+
+def test_frontier_cam_empty_and_full_dirty(make_graph):
+    """Degenerate dirty sets: no dirty ids (CAM search never runs) and
+    everything dirty must both match the numpy expansion exactly."""
+    from repro.streaming import FRONTIER_MODES
+    g = make_graph(30, 120, 4, seed=11)
+    nbr, wts = g.neighbor_sample(4)
+    for fd in (np.zeros(30, bool), np.ones(30, bool)):
+        ref = expand_frontier(nbr, wts, fd, np.zeros(30, bool), 2)
+        for mode in FRONTIER_MODES[1:]:
+            fr = expand_frontier(nbr, wts, fd, np.zeros(30, bool), 2,
+                                 mode=mode, interpret=True)
+            np.testing.assert_array_equal(fr.masks, ref.masks)
+
+
+def test_frontier_mode_validation(make_graph):
+    g = make_graph(10, 30, 4)
+    nbr, wts = g.neighbor_sample(3)
+    fd = np.zeros(10, bool)
+    with pytest.raises(ValueError, match="frontier mode"):
+        expand_frontier(nbr, wts, fd, fd, 2, mode="bloom")
+    plan = plan_execution(g, "centralized", n_clusters=2)
+    cfg = gnn.GNNConfig(in_dim=g.feature_len, hidden_dims=(8,), out_dim=4,
+                        sample=3)
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="frontier"):
+        IncrementalEngine(plan, cfg, params, frontier_mode="bloom")
+
+
+def test_engine_cam_frontier_matches_numpy(make_graph):
+    """The incremental engine's dirty sets (and therefore its refresh
+    output) are identical whichever membership path expands the frontier."""
+    g = make_graph(24, 100, 6, seed=3)
+    cfg = gnn.GNNConfig(in_dim=6, hidden_dims=(8,), out_dim=4, sample=4)
+    params = gnn.init_params(jax.random.PRNGKey(1), cfg)
+    outs, fracs = {}, {}
+    for fm in ("numpy", "cam"):
+        plan = plan_execution(g, "centralized", n_clusters=2)
+        eng = IncrementalEngine(plan, cfg, params, frontier_mode=fm)
+        eng.full_refresh()
+        d = GraphDelta(g.n_nodes)
+        d.update_features([2, 9], np.ones((2, 6), np.float32))
+        upd = eng.apply_delta(d)
+        outs[fm] = eng.embeddings()
+        fracs[fm] = upd.recompute_fraction
+    assert fracs["cam"] == fracs["numpy"]
+    np.testing.assert_allclose(outs["cam"], outs["numpy"],
+                               rtol=1e-6, atol=1e-6)
